@@ -1,0 +1,64 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.data import make_classification, partition_label_skew  # noqa: E402
+from repro.fl import FLConfig, FLSimulation  # noqa: E402
+from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss  # noqa: E402
+
+# Benchmark scale (CPU container): paper protocol at reduced scale.
+ROUNDS = int(os.environ.get("PROBIT_BENCH_ROUNDS", "60"))
+N_TRAIN = 3000
+PER_CLIENT = 100
+
+
+@functools.lru_cache(maxsize=None)
+def task(n_clients: int, classes_per_client: int = 2, seed: int = 0):
+    (xtr, ytr), (xte, yte) = make_classification(seed, n_train=N_TRAIN, n_test=600)
+    parts = partition_label_skew(ytr, n_clients, classes_per_client, PER_CLIENT, seed)
+    cx = np.stack([xtr[i] for i in parts])
+    cy = np.stack([ytr[i] for i in parts])
+    return cx, cy, {"x": xte, "y": yte}
+
+
+def run_fl(n_clients: int, rounds: int = None, classes_per_client: int = 2, **kw) -> FLSimulation:
+    cx, cy, test = task(n_clients, classes_per_client)
+    cfg = FLConfig(n_clients=n_clients, rounds=rounds or ROUNDS, local_epochs=2, **kw)
+    p0 = init_mlp(jax.random.PRNGKey(0), hidden=48)
+    sim = FLSimulation(
+        cfg,
+        p0,
+        functools.partial(xent_loss, mlp_logits),
+        functools.partial(accuracy, mlp_logits),
+        cx,
+        cy,
+        test,
+    )
+    sim.run(eval_every=cfg.rounds)
+    return sim
+
+
+def timed(fn, *args, reps: int = 20, warmup: int = 3) -> float:
+    """Median microseconds per call (jax-blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,27 @@
+"""Paper Fig. 3: training with dynamic vs fixed vs oracle quantization
+parameter b (Byzantine- and DP-free, as in the paper's ablation)."""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, run_fl
+
+
+def main(rounds: int | None = None) -> dict:
+    out = {}
+    for mode in ("dynamic", "fixed", "oracle"):
+        t0 = time.time()
+        sim = run_fl(20, rounds, aggregator="probit_plus", b_mode=mode)
+        acc = sim.history[-1]["acc"]
+        out[mode] = {"acc": acc, "b_final": sim.history[-1]["b"]}
+        emit(
+            f"fig3_b_{mode}",
+            (time.time() - t0) / sim.cfg.rounds * 1e6,
+            f"acc={acc:.4f};b_final={sim.history[-1]['b']:.5f}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    main()

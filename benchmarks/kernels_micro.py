@@ -1,0 +1,46 @@
+"""Kernel microbenchmarks: us/call of the Pallas paths (interpret mode on
+this CPU container — wall numbers are for CI tracking, not TPU projection)
+plus the analytic communication-compression ratios the kernels realize."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timed
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.kernels import ops  # noqa: E402
+
+
+def main(n: int = 262_144, m: int = 16) -> dict:
+    key = jax.random.PRNGKey(0)
+    delta = 0.01 * jax.random.normal(key, (n,))
+    b = jnp.full((n,), 0.05)
+    out: dict = {}
+
+    us = timed(lambda: ops.stoch_quant_pack(key, delta, b), reps=10)
+    ratio = 32.0  # fp32 -> 1 bit
+    out["stoch_quant_pack"] = us
+    emit("kernel_stoch_quant_pack", us, f"n={n};upload_compression={ratio:.0f}x")
+
+    packed = jnp.stack(
+        [ops.stoch_quant_pack(jax.random.fold_in(key, i), delta, b) for i in range(m)]
+    )
+    us = timed(lambda: ops.bit_aggregate(packed, b, n), reps=10)
+    out["bit_aggregate"] = us
+    hbm_ratio = 4.0 * m * n / (m * n / 8 + 4 * n)
+    emit("kernel_bit_aggregate", us, f"M={m};hbm_read_reduction={hbm_ratio:.1f}x")
+
+    w = jax.random.normal(key, (n,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    mom = jnp.zeros(n)
+    us = timed(lambda: ops.prox_sgd(w, w * 0.9, g, mom, 0.01, 0.2, 0.5), reps=10)
+    out["prox_sgd"] = us
+    emit("kernel_prox_sgd", us, "fused_passes=1_vs_4")
+    return out
+
+
+if __name__ == "__main__":
+    main()

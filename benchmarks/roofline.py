@@ -1,0 +1,82 @@
+"""Roofline table formatter: reads the dry-run JSON reports and prints the
+per-(arch x shape x mesh) roofline terms + bottleneck + MODEL_FLOPS ratio.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens processed:
+  train_4k: global_batch*seq*(1+local recompute)  — we report plain 6ND
+  prefill:  2*N*D (forward only)
+  decode:   2*N_active per token * batch
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.models.config import SHAPES  # noqa: E402
+
+
+def model_flops(rep: dict) -> float:
+    shape = SHAPES[rep["shape"]]
+    n = rep.get("n_active_params") or 0
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load_reports(directory: str = "reports") -> list[dict]:
+    reps = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        r = json.load(open(f))
+        if isinstance(r, dict) and "arch" in r:  # skip non-dryrun JSONs
+            reps.append(r)
+    return reps
+
+
+def main(directory: str = "reports") -> None:
+    reps = load_reports(directory)
+    if not reps:
+        print("no dry-run reports found — run: python -m repro.launch.dryrun --all --out reports/")
+        return
+    hdr = (
+        f"{'arch':<22} {'shape':<12} {'mesh':<8} {'variant':<10} {'t_comp(s)':>10} {'t_mem(s)':>10} "
+        f"{'t_coll(s)':>10} {'bottleneck':<11} {'useful%':>8} {'peakGiB':>8}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for r in reps:
+        var = r.get("variant", "baseline")
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<8} {var:<10} {'skip: ' + r['reason']}")
+            continue
+        if r.get("status") != "ok":
+            print(f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<8} {var:<10} ERROR {r.get('error','')[:60]}")
+            continue
+        n_dev = 512 if r["mesh"] == "2x16x16" else 256
+        mf = model_flops(r) / n_dev
+        useful = 100.0 * mf / max(r["flops_per_device"], 1.0)
+        peak = r.get("peak_bytes_per_device", 0) / 2**30
+        # prefer post-fusion HLO bytes x loop correction for the memory term
+        # (older reports stored pre-fusion logical bytes in t_memory_s)
+        t_mem = r["t_memory_s"]
+        if "hlo_bytes_per_device" in r and "loop_correction_rho" in r:
+            from repro.launch.analysis import HBM_BW
+
+            t_mem = r["hlo_bytes_per_device"] * r["loop_correction_rho"] / HBM_BW
+        tc, tm, tl = r["t_compute_s"], t_mem, r["t_collective_s"]
+        bott = max(("compute", tc), ("memory", tm), ("collective", tl), key=lambda kv: kv[1])[0]
+        print(
+            f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<8} {var:<10} "
+            f"{tc:>10.4f} {tm:>10.4f} {tl:>10.4f} "
+            f"{bott:<11} {useful:>7.1f}% {peak:>8.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "reports")

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, then the
+roofline table from the dry-run reports (if present).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer FL rounds")
+    ap.add_argument("--out", default="reports/bench_results.json")
+    args, _ = ap.parse_known_args()
+
+    rounds = 25 if args.quick else None
+
+    from . import fig3_dynamic_b, fig4_clients_privacy, table1_byzantine
+    from . import theorem_rates, kernels_micro, roofline
+
+    results = {}
+    print("name,us_per_call,derived")
+    print("# --- Theorem validation (Thm 1.3 / Thm 2) ---")
+    results["theorems"] = theorem_rates.main()
+    print("# --- Kernel microbenchmarks ---")
+    results["kernels"] = kernels_micro.main()
+    print("# --- Fig. 3: dynamic vs fixed vs oracle b ---")
+    results["fig3"] = fig3_dynamic_b.main(rounds)
+    print("# --- Fig. 4: clients / privacy sweeps ---")
+    results["fig4"] = fig4_clients_privacy.main(rounds)
+    print("# --- Table I: Byzantine attack grid (10% malicious) ---")
+    results["table1"] = table1_byzantine.main(rounds)
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"# results written to {args.out}")
+
+    print("# --- Roofline (from dry-run reports) ---")
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

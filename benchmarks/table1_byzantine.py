@@ -1,0 +1,45 @@
+"""Paper Table I / Figs. 5-8: test accuracy under each Byzantine attack at
+10% malicious clients, across all aggregation methods (b fixed at 0.01 as
+in the paper's Byzantine section)."""
+
+from __future__ import annotations
+
+import time
+
+from .common import emit, run_fl
+
+ATTACKS = ("gaussian", "sign_flip", "zero_gradient", "sample_duplicate")
+METHODS = (
+    ("probit_plus", {}),
+    ("probit_plus_dp", {"aggregator": "probit_plus", "dp_epsilon": 0.1}),
+    ("rsa", {"aggregator": "rsa"}),
+    ("signsgd_mv", {"aggregator": "signsgd_mv"}),
+    ("fed_gm", {"aggregator": "fed_gm"}),
+    ("fedavg", {"aggregator": "fedavg"}),
+)
+
+
+def main(rounds: int | None = None, byz_frac: float = 0.1) -> dict:
+    out: dict = {}
+    for attack in ATTACKS:
+        out[attack] = {}
+        for name, kw in METHODS:
+            kw = dict(kw)
+            kw.setdefault("aggregator", "probit_plus")
+            t0 = time.time()
+            sim = run_fl(
+                10, rounds, byz_frac=byz_frac, attack=attack,
+                b_mode="fixed", **kw,
+            )
+            acc = sim.history[-1]["acc"]
+            out[attack][name] = acc
+            emit(
+                f"table1_{attack}_{name}",
+                (time.time() - t0) / sim.cfg.rounds * 1e6,
+                f"acc={acc:.4f}",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    main()

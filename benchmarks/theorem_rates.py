@@ -1,0 +1,69 @@
+"""Theorem-level microbenchmarks: Thm 1.3 O(1/M) transmission error decay
+and Thm 2 Byzantine deviation vs the 2*beta*||b|| bound."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core import probit_plus_from_updates, stochastic_binarize, probit_plus_aggregate, flip_codes  # noqa: E402
+
+
+def main() -> dict:
+    key = jax.random.PRNGKey(0)
+    d = 4096
+    theta = 0.02 * jax.random.normal(key, (d,))
+    b = jnp.full((d,), 0.05)
+    out: dict = {"error_vs_M": {}, "byzantine": {}}
+
+    for m in (4, 16, 64, 256):
+        upd = jnp.tile(theta[None], (m, 1))
+        t0 = time.time()
+        keys = jax.random.split(jax.random.fold_in(key, m), 100)
+        errs = jax.vmap(
+            lambda k: jnp.sum((probit_plus_from_updates(k, upd, b) - theta) ** 2)
+        )(keys)
+        measured = float(jnp.mean(errs))
+        predicted = float(jnp.sum(b**2 - theta**2) / m)
+        out["error_vs_M"][m] = {"measured": measured, "predicted": predicted}
+        emit(
+            f"thm1_error_M{m}",
+            (time.time() - t0) / 100 * 1e6,
+            f"measured={measured:.4f};predicted={predicted:.4f};ratio={measured/predicted:.3f}",
+        )
+
+    m = 64
+    upd = theta + 0.01 * jax.random.normal(jax.random.fold_in(key, 9), (m, d))
+    for beta in (0.1, 0.3):
+        n_byz = int(m * beta)
+        t0 = time.time()
+        keys = jax.random.split(jax.random.fold_in(key, n_byz), 100)
+
+        def est(k, attacked):
+            ks = jax.random.split(k, m)
+            codes = jax.vmap(stochastic_binarize, in_axes=(0, 0, None))(ks, upd, b)
+            if attacked:
+                codes = flip_codes(codes, n_byz)
+            return probit_plus_aggregate(codes, b)
+
+        clean = jnp.mean(jax.vmap(lambda k: est(k, False))(keys), 0)
+        evil = jnp.mean(jax.vmap(lambda k: est(k, True))(keys), 0)
+        dev = float(jnp.linalg.norm(clean - evil))
+        bound = 2 * beta * float(jnp.linalg.norm(b))
+        out["byzantine"][beta] = {"deviation": dev, "bound": bound}
+        emit(
+            f"thm2_byz_beta{beta}",
+            (time.time() - t0) / 200 * 1e6,
+            f"deviation={dev:.4f};bound={bound:.4f};tight={dev/bound:.3f}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    main()

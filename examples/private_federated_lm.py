@@ -1,0 +1,60 @@
+"""Differentially-private federated fine-tuning of a transformer LM.
+
+Shows PRoBit+ as a first-class feature of the framework: the SAME
+aggregation pipeline that served the MLP/CNN experiments drives a
+transformer from the model zoo (reduced qwen2 family), with (eps,0)-local
+DP enforced by the quantizer's b-floor (Theorem 3).
+
+Run:  PYTHONPATH=src python examples/private_federated_lm.py
+"""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro import configs
+from repro.data import make_lm_streams
+from repro.fl import FLConfig, FLSimulation
+from repro.models import build_specs, train_loss
+from repro.models.spec import init_params
+
+
+def main():
+    cfg = configs.reduced(configs.get_config("qwen2-1.5b"))
+    params0 = init_params(build_specs(cfg), jax.random.PRNGKey(0))
+    params0 = jax.tree.map(lambda a: a.astype(jnp.float32), params0)
+
+    m, seq, per_client = 6, 48, 24
+    streams = make_lm_streams(0, m, cfg.vocab, seq + 1, per_client)
+    cx = np.stack(streams)  # (M, per_client, seq+1)
+    cy = cx[..., 0]  # unused placeholder labels for the runtime API
+
+    def loss_fn(params, batch):
+        toks = batch["x"]
+        return train_loss(
+            params, {"tokens": toks[..., :-1], "labels": toks[..., 1:]}, cfg
+        )
+
+    def ppl_metric(params, batch):
+        return -loss_fn(params, batch)  # higher is better
+
+    test = {"x": cx[:, :4].reshape(-1, seq + 1), "y": cy[:, :4].reshape(-1)}
+
+    for eps in (0.0, 0.1, 0.01):
+        fl = FLConfig(
+            n_clients=m, aggregator="probit_plus", rounds=8,
+            local_epochs=1, batch_size=4, dp_epsilon=eps,
+        )
+        sim = FLSimulation(fl, params0, loss_fn, ppl_metric, cx, cy, test)
+        sim.run(eval_every=8)
+        tag = "no DP" if eps == 0 else f"eps={eps}"
+        print(f"{tag:>9}: final test NLL {-sim.history[-1]['acc']:.4f} "
+              f"(b={sim.history[-1]['b']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

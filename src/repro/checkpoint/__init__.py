@@ -1,0 +1,5 @@
+"""Checkpointing: pytree save/restore."""
+
+from .io import save_checkpoint, load_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]

@@ -1,0 +1,64 @@
+"""Simple, dependency-free checkpointing for pytrees.
+
+Arrays are gathered to host (fully addressable on the simulation runtime;
+on a real multi-host mesh this becomes a per-host shard dump — the layout
+key encodes the flattened tree path so restore is structure-checked).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz cannot serialize bf16
+            arr = arr.astype(np.float32)  # lossless widening
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    flat = _flatten(tree)
+    np.savez_compressed(path, **flat)
+    meta = {"step": step, "keys": sorted(flat), **(metadata or {})}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like):
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves = jax.tree_util.tree_leaves_with_path(like)
+    restored = []
+    for p, leaf in leaves:
+        key = "/".join(str(x) for x in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        restored.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, restored)

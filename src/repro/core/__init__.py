@@ -1,0 +1,60 @@
+"""PRoBit+ core: the paper's contribution as composable JAX modules."""
+
+from .quantizer import (
+    binarize_prob,
+    stochastic_binarize,
+    pack_bits,
+    unpack_bits,
+    codes_to_counts,
+)
+from .aggregation import (
+    ml_estimate_from_counts,
+    probit_plus_aggregate,
+    probit_plus_from_updates,
+    fedavg_aggregate,
+    geometric_median,
+    signsgd_mv_aggregate,
+    rsa_aggregate,
+    get_bit_aggregator,
+    get_full_precision_aggregator,
+)
+from .privacy import DPConfig, dp_b_floor, privacy_loss, basic_composition
+from .attacks import get_attack, ATTACKS, flip_codes
+from .bcontrol import (
+    BControlConfig,
+    BState,
+    init_b_state,
+    loss_bit,
+    update_b,
+    oracle_b,
+)
+
+__all__ = [
+    "binarize_prob",
+    "stochastic_binarize",
+    "pack_bits",
+    "unpack_bits",
+    "codes_to_counts",
+    "ml_estimate_from_counts",
+    "probit_plus_aggregate",
+    "probit_plus_from_updates",
+    "fedavg_aggregate",
+    "geometric_median",
+    "signsgd_mv_aggregate",
+    "rsa_aggregate",
+    "get_bit_aggregator",
+    "get_full_precision_aggregator",
+    "DPConfig",
+    "dp_b_floor",
+    "privacy_loss",
+    "basic_composition",
+    "get_attack",
+    "ATTACKS",
+    "flip_codes",
+    "BControlConfig",
+    "BState",
+    "init_b_state",
+    "loss_bit",
+    "update_b",
+    "oracle_b",
+]

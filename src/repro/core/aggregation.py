@@ -1,0 +1,134 @@
+"""Server-side aggregators: PRoBit+ (paper Eq. 13) and the paper's baselines.
+
+Every aggregator shares the signature::
+
+    theta_hat = aggregate(updates, **kw)          # updates: (M, d) float
+or, for bit-based schemes::
+
+    theta_hat = aggregate_codes(codes, b, **kw)   # codes: (M, d) int8 ±1
+
+``d`` is the flattened model dimension (callers ravel the param pytree with
+``jax.flatten_util.ravel_pytree``). All run under ``jax.jit``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .quantizer import codes_to_counts, stochastic_binarize
+
+__all__ = [
+    "ml_estimate_from_counts",
+    "probit_plus_aggregate",
+    "probit_plus_from_updates",
+    "fedavg_aggregate",
+    "geometric_median",
+    "signsgd_mv_aggregate",
+    "rsa_aggregate",
+    "get_bit_aggregator",
+    "get_full_precision_aggregator",
+]
+
+
+# ---------------------------------------------------------------------------
+# PRoBit+
+# ---------------------------------------------------------------------------
+
+def ml_estimate_from_counts(counts: jax.Array, m: int, b: jax.Array) -> jax.Array:
+    """Eq. 13: ``theta_hat_i = (2 N_i - M)/M * b_i``.
+
+    This is the exact ML estimate of the mean parameter under the two-point
+    likelihood (Eq. 12); it equals ``mean_m(c_i^m) * b_i``.
+    """
+    return (2.0 * counts.astype(jnp.float32) - m) / m * b
+
+
+def probit_plus_aggregate(codes: jax.Array, b: jax.Array) -> jax.Array:
+    """Aggregate client one-bit codes ``(M, d)`` into ``theta_hat (d,)``."""
+    m = codes.shape[0]
+    return ml_estimate_from_counts(codes_to_counts(codes), m, b)
+
+
+def probit_plus_from_updates(
+    key: jax.Array, updates: jax.Array, b: jax.Array
+) -> jax.Array:
+    """End-to-end reference path: quantize each client then ML-aggregate."""
+    keys = jax.random.split(key, updates.shape[0])
+    codes = jax.vmap(stochastic_binarize, in_axes=(0, 0, None))(keys, updates, b)
+    return probit_plus_aggregate(codes, b)
+
+
+# ---------------------------------------------------------------------------
+# Full-precision baselines
+# ---------------------------------------------------------------------------
+
+def fedavg_aggregate(updates: jax.Array) -> jax.Array:
+    """FedAvg: plain mean of the (M, d) client updates."""
+    return jnp.mean(updates, axis=0)
+
+
+def geometric_median(
+    updates: jax.Array, iters: int = 16, eps: float = 1e-8
+) -> jax.Array:
+    """Fed-GM [Yin et al. 2018]: geometric median via Weiszfeld iterations.
+
+    Smoothed Weiszfeld: weights ``1/max(||u_m - y||, eps)``; ``iters`` fixed
+    steps under ``lax.fori_loop`` (convergence is geometric; 16 suffices for
+    aggregation noise levels in the paper's regime).
+    """
+    y0 = jnp.mean(updates, axis=0)
+
+    def body(_, y):
+        dist = jnp.sqrt(jnp.sum((updates - y) ** 2, axis=-1) + eps)
+        w = 1.0 / dist
+        return jnp.sum(updates * w[:, None], axis=0) / jnp.sum(w)
+
+    return jax.lax.fori_loop(0, iters, body, y0)
+
+
+# ---------------------------------------------------------------------------
+# Bit-based baselines (paper §VI-A)
+# ---------------------------------------------------------------------------
+
+def signsgd_mv_aggregate(codes: jax.Array, step: float = 0.01) -> jax.Array:
+    """signSGD with Majority Vote [Bernstein et al. 2019].
+
+    Clients upload ``sign(delta)``; the server takes the majority sign and
+    applies a hand-tuned step size (paper sets 0.01). The manual step size is
+    exactly the instability PRoBit+ removes.
+    """
+    vote = jnp.sign(jnp.sum(codes.astype(jnp.float32), axis=0))
+    return step * vote
+
+
+def rsa_aggregate(codes: jax.Array, step: float = 0.01) -> jax.Array:
+    """RSA [Li et al. 2019] server step: accumulate client signs × step."""
+    return step * jnp.sum(codes.astype(jnp.float32), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+_BIT_AGGREGATORS: dict[str, Callable] = {
+    "probit_plus": probit_plus_aggregate,
+    "signsgd_mv": lambda codes, b, step=0.01: signsgd_mv_aggregate(codes, step),
+    "rsa": lambda codes, b, step=0.01: rsa_aggregate(codes, step),
+}
+
+_FP_AGGREGATORS: dict[str, Callable] = {
+    "fedavg": fedavg_aggregate,
+    "fed_gm": geometric_median,
+}
+
+
+def get_bit_aggregator(name: str) -> Callable:
+    return _BIT_AGGREGATORS[name]
+
+
+def get_full_precision_aggregator(name: str) -> Callable:
+    return _FP_AGGREGATORS[name]

@@ -1,0 +1,65 @@
+"""Byzantine attacks from the paper's §VI-D, applied to stacked updates.
+
+Each attack rewrites the *first* ``n_byz`` rows of the ``(M, d)`` update
+matrix (the FL runtime shuffles client order, so which clients are Byzantine
+is immaterial). Attacks operate on the full-precision update; bit-based
+schemes then compress the malicious update with the honest quantizer — the
+clipping inside the compressor is exactly the paper's amplitude immunity.
+A Byzantine client in a bit scheme may also send arbitrary bits; the
+``flip_codes`` helper models the strongest such adversary for tests.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["get_attack", "ATTACKS", "flip_codes"]
+
+
+def _no_attack(key, updates, n_byz):
+    return updates
+
+
+def _gaussian(key, updates, n_byz):
+    """Each Byzantine uploads i.i.d. N(0, 100) (sigma = 10)."""
+    noise = 10.0 * jax.random.normal(key, updates[:n_byz].shape, updates.dtype)
+    return updates.at[:n_byz].set(noise)
+
+
+def _sign_flip(key, updates, n_byz):
+    """Scale the honest update by -5."""
+    return updates.at[:n_byz].set(-5.0 * updates[:n_byz])
+
+
+def _zero_gradient(key, updates, n_byz):
+    """Colluding: all Byzantine send the same value making the sum zero."""
+    honest_sum = jnp.sum(updates[n_byz:], axis=0)
+    z = -honest_sum / jnp.maximum(n_byz, 1)
+    return updates.at[:n_byz].set(jnp.broadcast_to(z, updates[:n_byz].shape))
+
+
+def _sample_duplicate(key, updates, n_byz):
+    """Every Byzantine replicates the first honest client's update."""
+    return updates.at[:n_byz].set(jnp.broadcast_to(updates[n_byz], updates[:n_byz].shape))
+
+
+ATTACKS: dict[str, Callable] = {
+    "none": _no_attack,
+    "gaussian": _gaussian,
+    "sign_flip": _sign_flip,
+    "zero_gradient": _zero_gradient,
+    "sample_duplicate": _sample_duplicate,
+}
+
+
+def get_attack(name: str) -> Callable:
+    """Return ``attack(key, updates(M,d), n_byz) -> updates``."""
+    return ATTACKS[name]
+
+
+def flip_codes(codes: jax.Array, n_byz: int) -> jax.Array:
+    """Worst-case bit adversary: invert the first ``n_byz`` clients' codes."""
+    return codes.at[:n_byz].set(-codes[:n_byz])

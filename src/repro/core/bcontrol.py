@@ -1,0 +1,64 @@
+"""Dynamic quantization-range controller for ``b`` (paper §VI-B).
+
+Each client uploads ONE extra bit per round: +1 if its local loss decreased
+during local training, -1 otherwise. The server majority-votes; on overall
+progress ``b`` is multiplied by ``up`` (paper: 1.01), on regression by
+``down`` (paper: 0.98). ``b`` starts at 0.01 elementwise.
+
+The controller also supports the two non-adaptive settings used in the
+paper's Fig. 3 ablation: ``fixed`` (b frozen at init) and ``oracle``
+(b_i = max_m |delta_i^m| + DP margin — requires omniscient clients, the
+upper bound of achievable performance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .privacy import DPConfig, dp_b_floor
+
+__all__ = ["BControlConfig", "BState", "init_b_state", "loss_bit", "update_b", "oracle_b"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BControlConfig:
+    mode: str = "dynamic"  # dynamic | fixed | oracle
+    init: float = 0.01
+    up: float = 1.01
+    down: float = 0.98
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BState:
+    """Scalar controller state (b is isotropic in the paper's experiments;
+    a per-coordinate vector is materialized at quantization time)."""
+
+    b: jax.Array  # scalar f32
+    prev_vote: jax.Array  # last majority vote, for logging
+
+
+def init_b_state(cfg: BControlConfig) -> BState:
+    return BState(b=jnp.float32(cfg.init), prev_vote=jnp.float32(0.0))
+
+
+def loss_bit(loss_before: jax.Array, loss_after: jax.Array) -> jax.Array:
+    """The one-bit training signal a client uploads: +1 = loss decreased."""
+    return jnp.where(loss_after < loss_before, jnp.int8(1), jnp.int8(-1))
+
+
+def update_b(state: BState, bits: jax.Array, cfg: BControlConfig) -> BState:
+    """Majority-vote the loss bits and rescale b (jit-safe)."""
+    vote = jnp.sum(bits.astype(jnp.float32))
+    factor = jnp.where(vote > 0, cfg.up, cfg.down)
+    if cfg.mode == "fixed":
+        factor = jnp.float32(1.0)
+    return BState(b=state.b * factor, prev_vote=vote)
+
+
+def oracle_b(updates: jax.Array, dp: DPConfig) -> jax.Array:
+    """Omniscient per-coordinate optimum: max_m |delta_i^m| + DP margin."""
+    return dp_b_floor(jnp.max(jnp.abs(updates), axis=0), dp)

@@ -1,0 +1,78 @@
+"""Stochastic one-bit compressor (paper Eq. 5) and bit packing.
+
+The PRoBit+ client-side compressor maps a model difference ``delta`` and a
+public quantization-range vector ``b`` (with ``b_i >= max_m |delta_i^m|``)
+to one bit per component::
+
+    c_i = +1  with probability (b_i + delta_i) / (2 b_i)
+    c_i = -1  with probability (b_i - delta_i) / (2 b_i)
+
+which is an unbiased one-bit estimate of ``delta_i / b_i``:
+``E[c_i] * b_i = delta_i``.
+
+All functions are pure-JAX and shape-polymorphic; the Pallas-accelerated
+versions live in :mod:`repro.kernels` and are validated against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "binarize_prob",
+    "stochastic_binarize",
+    "pack_bits",
+    "unpack_bits",
+    "codes_to_counts",
+]
+
+
+def binarize_prob(delta: jax.Array, b: jax.Array) -> jax.Array:
+    """Probability that the compressor emits +1 (Eq. 5), with clipping.
+
+    ``delta`` outside ``[-b, b]`` is clipped so the result is a valid
+    probability even when a (Byzantine or mis-calibrated) update exceeds the
+    public range — this is precisely the magnitude-immunity mechanism of
+    Theorem 2.
+    """
+    b = jnp.broadcast_to(b, delta.shape).astype(jnp.float32)
+    delta = jnp.clip(delta.astype(jnp.float32), -b, b)
+    # Guard b == 0 (dead coordinate): probability 1/2 keeps E[c]*b = 0 = delta.
+    safe_b = jnp.where(b > 0, b, 1.0)
+    p = 0.5 + 0.5 * delta / safe_b
+    return jnp.where(b > 0, p, 0.5)
+
+
+def stochastic_binarize(key: jax.Array, delta: jax.Array, b: jax.Array) -> jax.Array:
+    """Draw the one-bit codes ``c in {-1, +1}`` (int8) for one client."""
+    p = binarize_prob(delta, b)
+    u = jax.random.uniform(key, delta.shape, dtype=jnp.float32)
+    return jnp.where(u < p, jnp.int8(1), jnp.int8(-1))
+
+
+def pack_bits(codes: jax.Array) -> jax.Array:
+    """Pack ±1 int8 codes into uint8 words, 8 codes/byte (LSB-first).
+
+    The flat length is padded to a multiple of 8 with -1 codes (which unpack
+    to 0-bits and are sliced away by :func:`unpack_bits`).
+    """
+    flat = codes.reshape(-1)
+    pad = (-flat.shape[0]) % 8
+    flat = jnp.pad(flat, (0, pad), constant_values=-1)
+    bits = (flat > 0).astype(jnp.uint8).reshape(-1, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns ±1 int8 codes of length ``n``."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[:, None] >> shifts) & jnp.uint8(1)
+    codes = jnp.where(bits > 0, jnp.int8(1), jnp.int8(-1)).reshape(-1)
+    return codes[:n]
+
+
+def codes_to_counts(codes: jax.Array) -> jax.Array:
+    """``N_i`` of Eq. 12: number of +1 codes across the leading client axis."""
+    return jnp.sum((codes > 0).astype(jnp.int32), axis=0)

@@ -1,0 +1,67 @@
+"""Top-k sparse PRoBit+ — the paper's stated future work ("partial network
+updates"), implemented as a beyond-paper extension.
+
+Each client uploads bits only for the ``k`` coordinates of largest
+|delta| (plus their indices). The server forms the per-coordinate ML
+estimate with a per-coordinate client count::
+
+    theta_hat_i = (2 N_i - M_i) / M_i * b_i     (M_i = #clients reporting i)
+
+which reduces to Eq. 13 when k = d. Wire cost: k * (1 bit + log2(d) index
+bits) vs d bits — a win below k/d ≈ 1/(1+log2 d).
+
+Security notes (documented, enforced in the FL runtime):
+  * Byzantine: magnitude immunity is preserved (bits are still ±1), but a
+    malicious client can CONCENTRATE its 2b/M-per-coordinate influence on
+    k chosen coordinates — the Thm-2 bound becomes 2 beta ||b_S|| over the
+    attacked support. Same order for k = Theta(d), worse for tiny k.
+  * DP: the index set is data-dependent; releasing it breaks pure
+    (eps,0)-DP of the bit mechanism alone. The runtime therefore refuses
+    topk_frac < 1 with dp_epsilon > 0 (a noisy-top-k selector is the
+    standard fix and is left as future work, as in the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quantizer import binarize_prob
+
+__all__ = ["topk_binarize", "sparse_aggregate"]
+
+
+def topk_binarize(
+    key: jax.Array, delta: jax.Array, b: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (indices (k,) int32, codes (k,) int8) for one client."""
+    mag = jnp.abs(delta)
+    _, idx = jax.lax.top_k(mag, k)
+    d_sel = jnp.take(delta, idx)
+    b_sel = jnp.take(jnp.broadcast_to(b, delta.shape), idx)
+    p = binarize_prob(d_sel, b_sel)
+    u = jax.random.uniform(key, (k,), dtype=jnp.float32)
+    codes = jnp.where(u < p, jnp.int8(1), jnp.int8(-1))
+    return idx.astype(jnp.int32), codes
+
+
+def sparse_aggregate(
+    indices: jax.Array, codes: jax.Array, b: jax.Array, d: int
+) -> jax.Array:
+    """indices/codes: (M, k); returns theta_hat (d,).
+
+    Per-coordinate ML estimate with varying client counts; coordinates no
+    client reported stay at 0 (no update — the server cannot infer a sign
+    it never observed).
+    """
+    m, k = indices.shape
+    plus = jnp.zeros((d,), jnp.float32)
+    count = jnp.zeros((d,), jnp.float32)
+    ones = jnp.ones((m, k), jnp.float32)
+    plus = plus.at[indices.reshape(-1)].add(
+        (codes.reshape(-1) > 0).astype(jnp.float32)
+    )
+    count = count.at[indices.reshape(-1)].add(ones.reshape(-1))
+    safe = jnp.maximum(count, 1.0)
+    theta = (2.0 * plus - count) / safe * jnp.broadcast_to(b, (d,))
+    return jnp.where(count > 0, theta, 0.0)

@@ -1,0 +1,16 @@
+"""Data pipeline: synthetic datasets + heterogeneous FL partitioners."""
+
+from .synthetic import (
+    make_classification,
+    make_image_classification,
+    make_lm_streams,
+)
+from .partition import partition_label_skew, partition_dirichlet
+
+__all__ = [
+    "make_classification",
+    "make_image_classification",
+    "make_lm_streams",
+    "partition_label_skew",
+    "partition_dirichlet",
+]

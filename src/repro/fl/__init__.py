@@ -1,0 +1,6 @@
+"""Federated-learning runtime: the paper's training protocol (Algorithm 1)
+with pluggable aggregators, Byzantine attacks, and DP."""
+
+from .runtime import FLConfig, FLSimulation
+
+__all__ = ["FLConfig", "FLSimulation"]

@@ -1,0 +1,275 @@
+"""FL simulation runtime — paper Algorithm 1 end-to-end.
+
+One round (jit-compiled, clients vmapped):
+  1. every client trains its *personal* model from its previous local
+     parameters, prox-regularized toward the current global model (Eq. 4);
+  2. model differences ``delta^m = w_local^m - w_global`` are formed;
+  3. Byzantine clients replace their delta per the configured attack;
+  4. the configured aggregator combines the updates — PRoBit+ quantizes
+     with the dynamic/fixed/oracle ``b`` (+ DP margin) and ML-estimates
+     (Eq. 13); baselines: FedAvg / Fed-GM / signSGD-MV / RSA;
+  5. the global model steps by ``theta_hat``; the dynamic-b controller
+     majority-votes the clients' one-bit loss signals (§VI-B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from ..core import (
+    BControlConfig,
+    DPConfig,
+    get_attack,
+    geometric_median,
+    init_b_state,
+    loss_bit,
+    ml_estimate_from_counts,
+    probit_plus_aggregate,
+    rsa_aggregate,
+    signsgd_mv_aggregate,
+    stochastic_binarize,
+    update_b,
+    oracle_b,
+)
+from ..optim import local_prox_train
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_clients: int = 20
+    byz_frac: float = 0.0
+    attack: str = "none"
+    aggregator: str = "probit_plus"  # | fedavg | fed_gm | signsgd_mv | rsa
+    rounds: int = 30
+    local_epochs: int = 5
+    batch_size: int = 10
+    lr: float = 0.01
+    momentum: float = 0.5
+    lam: float = 0.2
+    dp_epsilon: float = 0.0  # 0 disables DP
+    l1_sensitivity: float = 2e-4  # paper: 0.02 * lr
+    b_mode: str = "dynamic"  # dynamic | fixed | oracle
+    b_init: float = 0.01
+    # BEYOND-PAPER: error feedback — each client carries the quantization
+    # residual e_m into the next round (delta_eff = delta + e_m;
+    # e_m' = delta_eff - b*c_m). Classical EF for 1-bit compressors;
+    # the paper does not use it. DP note: EF reuses the residual across
+    # rounds, so the per-round (eps,0) guarantee composes differently —
+    # we therefore disable EF when dp_epsilon > 0.
+    error_feedback: bool = False
+    # BEYOND-PAPER: top-k sparse PRoBit+ (the paper's stated future work).
+    # Fraction of coordinates each client uploads (1.0 = dense Eq. 5/13).
+    # Refused under DP: the data-dependent index set breaks (eps,0)-DP
+    # (see core/sparse.py).
+    topk_frac: float = 1.0
+    # Partial participation: fraction of clients sampled per round
+    # (cross-device FL standard; M in Eq. 13 becomes the sampled count).
+    # Amplification-by-subsampling would further tighten the DP budget —
+    # we keep the per-round eps unchanged (conservative).
+    participation: float = 1.0
+
+    @property
+    def n_active(self) -> int:
+        return max(int(self.n_clients * self.participation), 1)
+
+    def __post_init__(self):
+        if self.topk_frac < 1.0 and self.dp_epsilon > 0:
+            raise ValueError(
+                "topk_frac < 1 releases a data-dependent index set and "
+                "breaks the (eps,0)-DP guarantee; use dense PRoBit+ with DP."
+            )
+    agg_step: float = 0.01  # server step for signSGD-MV / RSA
+    gm_iters: int = 16
+    use_kernels: bool = False
+    seed: int = 0
+
+    @property
+    def n_byz(self) -> int:
+        return int(self.n_clients * self.byz_frac)
+
+    @property
+    def dp(self) -> DPConfig:
+        return DPConfig(self.dp_epsilon, self.l1_sensitivity)
+
+    @property
+    def bctrl(self) -> BControlConfig:
+        return BControlConfig(self.b_mode, self.b_init)
+
+
+class FLSimulation:
+    """Simulation-mode FL (CPU): the paper-faithful experiment harness."""
+
+    def __init__(
+        self,
+        cfg: FLConfig,
+        init_params,
+        loss_fn: Callable,  # loss_fn(params_pytree, {"x","y"}) -> scalar
+        acc_fn: Callable,
+        client_x: np.ndarray,  # (M, per_client, ...)
+        client_y: np.ndarray,  # (M, per_client)
+        test: dict,
+    ):
+        self.cfg = cfg
+        w0, self.unravel = ravel_pytree(init_params)
+        self.w_global = w0
+        self.w_locals = jnp.tile(w0[None], (cfg.n_clients, 1))
+        self.residuals = jnp.zeros((cfg.n_clients, w0.shape[0]), jnp.float32)
+        self.b_state = init_b_state(cfg.bctrl)
+        self.loss_fn = loss_fn
+        self.acc_fn = acc_fn
+        self.client_x = jnp.asarray(client_x)
+        self.client_y = jnp.asarray(client_y)
+        self.test = {k: jnp.asarray(v) for k, v in test.items()}
+        self.d = w0.shape[0]
+        self._round = jax.jit(self._round_impl)
+        self.history: list[dict] = []
+
+    # -- data --------------------------------------------------------------
+
+    def _round_batches(self, key):
+        cfg = self.cfg
+        per_client = self.client_x.shape[1]
+        steps = max(cfg.local_epochs * per_client // cfg.batch_size, 1)
+        idx = jax.random.randint(
+            key, (cfg.n_clients, steps, cfg.batch_size), 0, per_client
+        )
+        bx = jax.vmap(lambda x, i: x[i])(self.client_x, idx)
+        by = jax.vmap(lambda y, i: y[i])(self.client_y, idx)
+        return {"x": bx, "y": by}
+
+    # -- one round ----------------------------------------------------------
+
+    def _aggregate(self, key, deltas, b_scalar, residuals):
+        cfg = self.cfg
+        m = deltas.shape[0]
+        if cfg.aggregator == "fedavg":
+            return jnp.mean(deltas, axis=0), residuals
+        if cfg.aggregator == "fed_gm":
+            return geometric_median(deltas, cfg.gm_iters), residuals
+        if cfg.aggregator in ("signsgd_mv", "rsa"):
+            codes = jnp.where(deltas >= 0, jnp.int8(1), jnp.int8(-1))
+            if cfg.aggregator == "signsgd_mv":
+                return signsgd_mv_aggregate(codes, cfg.agg_step), residuals
+            return rsa_aggregate(codes, cfg.agg_step), residuals
+        # PRoBit+
+        use_ef = cfg.error_feedback and not cfg.dp.enabled
+        eff = deltas + residuals if use_ef else deltas
+        if cfg.b_mode == "oracle":
+            b_vec = oracle_b(eff, cfg.dp)
+        else:
+            b_eff = b_scalar
+            if cfg.dp.enabled:
+                b_eff = b_eff + (1.0 + 1.0 / cfg.dp.epsilon) * cfg.dp.l1_sensitivity
+            b_vec = jnp.full((self.d,), b_eff, jnp.float32)
+        keys = jax.random.split(key, m)
+        if cfg.topk_frac < 1.0:
+            from ..core.sparse import sparse_aggregate, topk_binarize
+
+            k = max(int(self.d * cfg.topk_frac), 1)
+            idx, codes = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
+                keys, eff, b_vec, k
+            )
+            theta = sparse_aggregate(idx, codes, b_vec, self.d)
+            if use_ef:
+                rows = jnp.arange(eff.shape[0])[:, None]
+                sent = jnp.zeros_like(eff).at[rows, idx].set(
+                    codes.astype(jnp.float32)
+                )
+                # unreported coordinates carry their full delta forward
+                residuals = eff - sent * b_vec
+            return theta, residuals
+        codes = jax.vmap(stochastic_binarize, in_axes=(0, 0, None))(
+            keys, eff, b_vec
+        )
+        if use_ef:
+            residuals = eff - codes.astype(jnp.float32) * b_vec
+        return probit_plus_aggregate(codes, b_vec), residuals
+
+    def _round_impl(self, key, w_global, w_locals, b, batches, residuals):
+        cfg = self.cfg
+        if cfg.participation < 1.0:
+            sel = jax.random.choice(
+                jax.random.fold_in(key, 99), cfg.n_clients,
+                (cfg.n_active,), replace=False,
+            )
+        else:
+            sel = jnp.arange(cfg.n_clients)
+        w_sel = w_locals[sel]
+        res_sel = residuals[sel]
+        batches = jax.tree.map(lambda a: a[sel], batches)
+
+        def client(w_local, cb, ck):
+            return local_prox_train(
+                self.loss_fn,
+                w_global,
+                w_local,
+                self.unravel,
+                cb,
+                lr=cfg.lr,
+                mu=cfg.momentum,
+                lam=cfg.lam,
+                use_kernel=cfg.use_kernels,
+            )
+
+        ckeys = jax.random.split(key, cfg.n_active)
+        w_new, loss_before, loss_after = jax.vmap(client)(w_sel, batches, ckeys)
+        deltas = w_new - w_global[None]
+
+        k_att, k_q = jax.random.split(jax.random.fold_in(key, 1))
+        n_byz = int(cfg.n_active * cfg.byz_frac)
+        deltas_att = get_attack(cfg.attack)(k_att, deltas, n_byz)
+
+        theta, res_new = self._aggregate(k_q, deltas_att, b.b, res_sel)
+        w_global_new = w_global + theta
+
+        bits = jax.vmap(loss_bit)(loss_before, loss_after)
+        b_new = update_b(b, bits, cfg.bctrl)
+        w_locals_new = w_locals.at[sel].set(w_new)
+        residuals_new = residuals.at[sel].set(res_new)
+        return w_global_new, w_locals_new, b_new, jnp.mean(loss_after), residuals_new
+
+    # -- driver --------------------------------------------------------------
+
+    def evaluate(self) -> float:
+        params = self.unravel(self.w_global)
+        return float(self.acc_fn(params, self.test))
+
+    def run(self, rounds: int | None = None, eval_every: int = 5, verbose: bool = False):
+        cfg = self.cfg
+        rounds = rounds or cfg.rounds
+        key = jax.random.PRNGKey(cfg.seed)
+        for t in range(rounds):
+            key, kb, kr = jax.random.split(key, 3)
+            batches = self._round_batches(kb)
+            (
+                self.w_global,
+                self.w_locals,
+                self.b_state,
+                loss,
+                self.residuals,
+            ) = self._round(
+                kr, self.w_global, self.w_locals, self.b_state, batches,
+                self.residuals,
+            )
+            if (t + 1) % eval_every == 0 or t == rounds - 1:
+                acc = self.evaluate()
+                rec = {
+                    "round": t + 1,
+                    "acc": acc,
+                    "loss": float(loss),
+                    "b": float(self.b_state.b),
+                }
+                self.history.append(rec)
+                if verbose:
+                    print(
+                        f"[{cfg.aggregator}|{cfg.attack}|byz={cfg.byz_frac:.0%}] "
+                        f"round {t+1}: acc={acc:.4f} loss={rec['loss']:.4f} b={rec['b']:.5f}"
+                    )
+        return self.history

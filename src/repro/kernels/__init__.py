@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for PRoBit+'s compute hot spots.
+
+Kernels (each: <name>.py kernel, ops.py jit wrapper, ref.py jnp oracle):
+  * stoch_quant   -- fused Eq.-5 stochastic binarize + 8:1 bit pack
+  * bit_aggregate -- unpack + vote count + Eq.-13 ML estimate
+  * prox_sgd      -- fused prox-regularized SGD+momentum local update
+"""
+
+from .ops import stoch_quant_pack, bit_aggregate, prox_sgd, padded_len
+
+__all__ = ["stoch_quant_pack", "bit_aggregate", "prox_sgd", "padded_len"]

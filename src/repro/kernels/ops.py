@@ -1,0 +1,88 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These accept flat (N,) vectors of arbitrary length, handle padding to the
+(rows, 1024) tile layout, and dispatch to the kernels. ``interpret`` is
+auto-selected: True on CPU (the container's validation mode), False on TPU
+(the deployment target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .stoch_quant import LANES, stoch_quant_pack_2d
+from .bit_aggregate import bit_aggregate_2d
+from .prox_sgd import prox_sgd_2d
+from . import ref
+
+__all__ = ["stoch_quant_pack", "bit_aggregate", "prox_sgd", "padded_len"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def padded_len(n: int) -> int:
+    return ((n + LANES - 1) // LANES) * LANES
+
+
+def _pad_to_rows(x: jax.Array, fill: float) -> jax.Array:
+    n = x.shape[0]
+    p = padded_len(n)
+    x = jnp.pad(x.astype(jnp.float32), (0, p - n), constant_values=fill)
+    return x.reshape(-1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stoch_quant_pack(
+    key: jax.Array, delta: jax.Array, b: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """Flat (N,) delta/b -> packed (ceil(N/1024)*128,) uint8 codes."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = delta.shape[0]
+    d2 = _pad_to_rows(delta, 0.0)
+    b2 = _pad_to_rows(jnp.broadcast_to(b, delta.shape), 0.0)
+    u2 = jax.random.uniform(key, d2.shape, dtype=jnp.float32)
+    packed = stoch_quant_pack_2d(d2, b2, u2, interpret=interpret)
+    return packed.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def bit_aggregate(
+    packed: jax.Array, b: jax.Array, n: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """packed (M, P) uint8 (P = padded_len(n)/8), b (n,) -> theta_hat (n,)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b2 = _pad_to_rows(jnp.broadcast_to(b, (n,)), 0.0)
+    theta2 = bit_aggregate_2d(packed, b2, interpret=interpret)
+    return theta2.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prox_sgd(
+    w: jax.Array,
+    w0: jax.Array,
+    grad: jax.Array,
+    momentum: jax.Array,
+    eta: jax.Array,
+    lam: jax.Array,
+    mu: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Flat (N,) fused prox-SGD step; returns (w_new, momentum_new)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = w.shape[0]
+    args = [_pad_to_rows(x, 0.0) for x in (w, w0, grad, momentum)]
+    elm = jnp.stack(
+        [jnp.asarray(eta, jnp.float32), jnp.asarray(lam, jnp.float32),
+         jnp.asarray(mu, jnp.float32)]
+    )
+    w2, m2 = prox_sgd_2d(*args, elm, interpret=interpret)
+    return w2.reshape(-1)[:n], m2.reshape(-1)[:n]

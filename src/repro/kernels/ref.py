@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the single source of truth for kernel semantics; tests sweep
+shapes/dtypes and ``assert_allclose`` the Pallas outputs against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stoch_quant_pack_ref(
+    delta: jax.Array, b: jax.Array, uniforms: jax.Array
+) -> jax.Array:
+    """Fused Eq.-5 binarize + LSB-first 8:1 bit pack.
+
+    Args:
+      delta: (N,) float — model difference (N divisible by 8).
+      b: (N,) float — public quantization range (>= 0).
+      uniforms: (N,) float32 in [0, 1).
+    Returns:
+      (N // 8,) uint8 packed codes; bit=1 encodes c=+1.
+    """
+    b = b.astype(jnp.float32)
+    d = jnp.clip(delta.astype(jnp.float32), -b, b)
+    safe_b = jnp.where(b > 0, b, 1.0)
+    p = jnp.where(b > 0, 0.5 + 0.5 * d / safe_b, 0.5)
+    bits = (uniforms < p).astype(jnp.uint8).reshape(-1, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+
+
+def bit_aggregate_ref(packed: jax.Array, b: jax.Array) -> jax.Array:
+    """Unpack M clients' packed codes, popcount-sum, ML-estimate (Eq. 13).
+
+    Args:
+      packed: (M, N // 8) uint8.
+      b: (N,) float32.
+    Returns:
+      (N,) float32 — theta_hat = (2 N_i - M) / M * b_i.
+    """
+    m = packed.shape[0]
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)  # (M, N//8, 8)
+    counts = jnp.sum(bits.astype(jnp.int32), axis=0).reshape(-1)  # (N,)
+    return (2.0 * counts - m) / m * b.astype(jnp.float32)
+
+
+def prox_sgd_ref(
+    w: jax.Array,
+    w0: jax.Array,
+    grad: jax.Array,
+    momentum: jax.Array,
+    eta: float,
+    lam: float,
+    mu: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused prox-regularized SGD+momentum step (paper Eq. 4 local solver).
+
+    g_total = grad + lam * (w - w0)
+    momentum' = mu * momentum + g_total
+    w' = w - eta * momentum'
+    """
+    g = grad + lam * (w - w0)
+    new_m = mu * momentum + g
+    return w - eta * new_m, new_m

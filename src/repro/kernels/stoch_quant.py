@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused stochastic one-bit quantize (Eq. 5) + bit pack.
+
+This is the client-side hot loop of PRoBit+: every parameter of the model
+difference is binarized and packed 8/byte before upload. Fusing the two
+steps keeps the f32 delta in VMEM and writes only N/8 bytes back to HBM —
+a 4x reduction in HBM write traffic vs. materializing int8 codes.
+
+Layout: the flat parameter vector is viewed as ``(rows, 1024)`` — the last
+dim is 8 x 128 (sublane x lane) aligned; packing reduces 1024 lanes of f32
+to 128 lanes of uint8, both hardware-tile-aligned. The in-kernel
+``reshape(br, 128, 8)`` is a VREG relayout the Mosaic compiler handles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024  # f32 elements per row; packs to 128 uint8 lanes
+
+
+def _kernel(delta_ref, b_ref, u_ref, out_ref):
+    d = delta_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    safe_b = jnp.where(b > 0, b, 1.0)
+    p = jnp.where(b > 0, 0.5 + 0.5 * jnp.clip(d, -b, b) / safe_b, 0.5)
+    bits = (u < p).astype(jnp.uint8)
+    br = bits.shape[0]
+    bits = bits.reshape(br, LANES // 8, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    out_ref[...] = jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stoch_quant_pack_2d(
+    delta: jax.Array,
+    b: jax.Array,
+    uniforms: jax.Array,
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """delta/b/uniforms: (rows, 1024); returns packed (rows, 128) uint8."""
+    rows = delta.shape[0]
+    assert delta.shape == (rows, LANES) == b.shape == uniforms.shape
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES // 8), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES // 8), jnp.uint8),
+        interpret=interpret,
+    )(delta, b, uniforms)

@@ -1,0 +1,15 @@
+"""Launch layer: production mesh, multi-pod dry-run, training driver.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+dedicated process (python -m repro.launch.dryrun).
+"""
+
+from .mesh import make_production_mesh, make_host_mesh
+from .fl_step import DistFLConfig, make_fl_train_step
+
+__all__ = [
+    "make_production_mesh",
+    "make_host_mesh",
+    "DistFLConfig",
+    "make_fl_train_step",
+]

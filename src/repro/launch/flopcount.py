@@ -1,0 +1,141 @@
+"""Loop-aware FLOP / logical-byte counting from jaxprs.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-reports scanned programs (layer scans, client scans, chunked
+attention) by orders of magnitude. This module walks the jaxpr instead,
+multiplying through ``lax.scan`` trip counts (and shard_map device counts),
+giving exact totals for dot/conv plus elementwise traffic.
+
+Used by the dry-run to produce the roofline's compute/memory terms; the
+ratio jaxpr_flops / hlo_flops also serves as the loop-correction factor for
+HLO-parsed collective bytes (collectives live in the same loops as the
+flops to first order; documented in EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+_ELEMENTWISE = {
+    "add", "add_any", "sub", "mul", "div", "max", "min", "pow", "rem",
+    "exp", "log", "log1p", "tanh", "logistic", "rsqrt", "sqrt", "erf",
+    "neg", "abs", "sign", "floor", "ceil", "round", "cos", "sin",
+    "integer_pow", "select_n", "clamp", "cumsum", "cummax", "cumprod",
+    "cumlogsumexp", "and", "or", "not", "xor", "eq", "ne", "lt", "le",
+    "gt", "ge", "nextafter", "squeeze", "expand_dims",
+}
+
+_DATA_MOVEMENT = {
+    "convert_element_type", "reshape", "transpose", "broadcast_in_dim",
+    "concatenate", "slice", "dynamic_slice", "dynamic_update_slice",
+    "gather", "scatter", "scatter-add", "scatter_add", "pad", "rev",
+    "iota", "reduce_sum", "reduce_max", "reduce_min", "reduce_and",
+    "reduce_or", "reduce_prod", "argmax", "argmin", "sort", "top_k",
+}
+
+_CALL_PARAM_NAMES = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0.0
+
+
+def _aval_size(aval) -> float:
+    try:
+        return float(np.prod(aval.shape))
+    except Exception:
+        return 0.0
+
+
+class Counter:
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.unknown_while = 0
+
+    def count(self, jaxpr, mult: float = 1.0):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            in_b = sum(
+                _aval_bytes(v.aval) for v in eqn.invars if hasattr(v, "aval")
+            )
+
+            if name == "dot_general":
+                dnums = eqn.params["dimension_numbers"]
+                (lc, rc), (lb, rb) = dnums
+                lhs = eqn.invars[0].aval
+                k = math.prod(lhs.shape[i] for i in lc) if lc else 1
+                out_sz = sum(_aval_size(v.aval) for v in eqn.outvars)
+                self.flops += mult * 2.0 * out_sz * k
+                self.bytes += mult * (in_b + out_b)
+            elif name == "conv_general_dilated":
+                rhs = eqn.invars[1].aval  # kernel
+                out = eqn.outvars[0].aval
+                groups = eqn.params.get("feature_group_count", 1)
+                kernel_elems = math.prod(rhs.shape)  # spatial*in*out
+                out_spatial_batch = _aval_size(out)
+                # flops = 2 * out_elems * (kernel_size * in_ch / groups):
+                # kernel_elems / out_ch = spatial * in_ch_per_group
+                dn = eqn.params["dimension_numbers"]
+                out_ch = rhs.shape[dn.rhs_spec[0]]
+                self.flops += mult * 2.0 * out_spatial_batch * (kernel_elems / out_ch)
+                self.bytes += mult * (in_b + out_b)
+            elif name == "scan":
+                length = eqn.params["length"]
+                inner = eqn.params["jaxpr"].jaxpr
+                self.count(inner, mult * length)
+            elif name == "while":
+                # no static trip count: count body once and record
+                self.unknown_while += 1
+                self.count(eqn.params["body_jaxpr"].jaxpr, mult)
+            elif name == "cond":
+                branches = eqn.params["branches"]
+                if branches:
+                    self.count(branches[0].jaxpr, mult)  # assume branch 0 cost
+            elif name == "shard_map":
+                mesh = eqn.params.get("mesh")
+                n = 1
+                if mesh is not None:
+                    n = int(np.prod(list(mesh.shape.values())))
+                self.count(eqn.params["jaxpr"], mult * n)
+            elif name in ("custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr"):
+                sub = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+                if sub is not None:
+                    self.count(getattr(sub, "jaxpr", sub), mult)
+            elif name in ("pjit", "closed_call", "core_call", "xla_call", "remat_call", "checkpoint", "remat", "remat2"):
+                sub = None
+                for key in _CALL_PARAM_NAMES:
+                    if key in eqn.params:
+                        sub = eqn.params[key]
+                        break
+                if sub is not None:
+                    self.count(getattr(sub, "jaxpr", sub), mult)
+            elif name in _ELEMENTWISE:
+                out_sz = sum(_aval_size(v.aval) for v in eqn.outvars)
+                self.flops += mult * out_sz
+                self.bytes += mult * (in_b + out_b)
+            elif name in _DATA_MOVEMENT:
+                self.bytes += mult * (in_b + out_b)
+            else:
+                # unknown primitive: count data movement only
+                self.bytes += mult * (in_b + out_b)
+
+
+def count_fn(fn, *abstract_args) -> dict:
+    """Trace ``fn`` and return loop-aware global flop/byte totals."""
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    c = Counter()
+    c.count(closed.jaxpr)
+    return {
+        "flops_total": c.flops,
+        "bytes_total": c.bytes,
+        "unknown_while_loops": c.unknown_while,
+    }

@@ -1,0 +1,23 @@
+"""Model zoo: unified pattern-based architectures (dense GQA, MoE, Mamba,
+xLSTM, hybrid, encoder-only, VLM/audio backbones)."""
+
+from .config import ModelConfig, ShapeConfig, SHAPES
+from .spec import LeafSpec, abstract_params, init_params, param_pspecs, count_params
+from .model import (
+    build_specs,
+    train_loss,
+    prefill,
+    serve_step,
+    init_cache,
+    cache_logical,
+    backbone,
+)
+from .inputs import input_specs, input_logical, sample_batch, batch_structure
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "LeafSpec",
+    "abstract_params", "init_params", "param_pspecs", "count_params",
+    "build_specs", "train_loss", "prefill", "serve_step", "init_cache",
+    "cache_logical", "backbone", "input_specs", "input_logical",
+    "sample_batch", "batch_structure",
+]

@@ -1,0 +1,72 @@
+"""Input specifications: ShapeDtypeStruct stand-ins for the dry-run (no
+allocation) and concrete random batches for smoke tests.
+
+For the [audio]/[vlm] architectures the modality frontend is a stub per the
+harness carve-out: ``input_specs`` yields precomputed frame/patch
+embeddings of the right shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, ShapeConfig
+
+
+def batch_structure(cfg: ModelConfig, batch: int, seq: int, kind: str) -> dict:
+    """Returns {name: (shape, dtype, logical)} for one step's model inputs."""
+    if kind == "decode":
+        return {"tokens": ((batch, 1), jnp.int32, ("batch", None))}
+    if cfg.frontend == "audio":
+        return {
+            "feats": ((batch, seq, cfg.d_model), jnp.bfloat16, ("batch", None, None)),
+            "labels": ((batch, seq), jnp.int32, ("batch", None)),
+            "mask": ((batch, seq), jnp.bool_, ("batch", None)),
+        }
+    if cfg.frontend == "vision":
+        p = cfg.frontend_tokens
+        text = seq - p
+        assert text > 0
+        d: dict = {
+            "patches": ((batch, p, cfg.d_model), jnp.bfloat16, ("batch", None, None)),
+            "tokens": ((batch, text), jnp.int32, ("batch", None)),
+        }
+        if kind == "train":
+            d["labels"] = ((batch, text), jnp.int32, ("batch", None))
+        return d
+    d = {"tokens": ((batch, seq), jnp.int32, ("batch", None))}
+    if kind == "train":
+        d["labels"] = ((batch, seq), jnp.int32, ("batch", None))
+    return d
+
+
+def input_specs(cfg: ModelConfig, batch: int, seq: int, kind: str) -> dict:
+    """ShapeDtypeStruct pytree (weak-type-correct, no allocation)."""
+    return {
+        k: jax.ShapeDtypeStruct(shape, dtype)
+        for k, (shape, dtype, _) in batch_structure(cfg, batch, seq, kind).items()
+    }
+
+
+def input_logical(cfg: ModelConfig, batch: int, seq: int, kind: str) -> dict:
+    return {
+        k: logical
+        for k, (_, __, logical) in batch_structure(cfg, batch, seq, kind).items()
+    }
+
+
+def sample_batch(cfg: ModelConfig, batch: int, seq: int, kind: str, seed: int = 0) -> dict:
+    """Concrete random batch for CPU smoke tests."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (shape, dtype, _) in batch_structure(cfg, batch, seq, kind).items():
+        if dtype == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels") else 2
+            out[k] = jnp.asarray(rng.integers(0, hi, size=shape), jnp.int32)
+        elif dtype == jnp.bool_:
+            out[k] = jnp.asarray(rng.random(shape) < 0.3)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(shape), jnp.float32).astype(dtype)
+    return out

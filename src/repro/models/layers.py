@@ -1,0 +1,317 @@
+"""Shared neural layers: norms, RoPE, chunked (flash-style) attention,
+decode attention over (optionally ring-buffer) KV caches, dense FFN.
+
+All forwards are pure functions of (params, inputs); parameter structures
+are declared by the ``*_specs`` builders as LeafSpec trees.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard
+from .config import ModelConfig
+from .spec import LeafSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": LeafSpec((d,), (None,), "ones"), "b": LeafSpec((d,), (None,), "zeros")}
+    return {"w": LeafSpec((d,), (None,), "ones")}
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "b" in p:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["w"].astype(jnp.float32) + p[
+            "b"
+        ].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["w"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    s: dict = {
+        "wq": LeafSpec((d, cfg.n_heads, hd), (None, "heads", None)),
+        "wk": LeafSpec((d, cfg.n_kv_heads, hd), (None, "kv", None)),
+        "wv": LeafSpec((d, cfg.n_kv_heads, hd), (None, "kv", None)),
+        "wo": LeafSpec((cfg.n_heads, hd, d), ("heads", None, None)),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = LeafSpec((cfg.n_heads, hd), ("heads", None), "zeros")
+        s["bk"] = LeafSpec((cfg.n_kv_heads, hd), ("kv", None), "zeros")
+        s["bv"] = LeafSpec((cfg.n_kv_heads, hd), ("kv", None), "zeros")
+    return s
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv", None)
+    v = shard(v, "batch", None, "kv", None)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention in O(S * chunk) memory (flash-style).
+
+    q: (B, S, H, hd);  k, v: (B, S, KV, hd).  GQA via H = KV * G grouping.
+    ``window > 0`` restricts keys to ``(i - window, i]``.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    cq = min(chunk_q, S)
+    ck = min(chunk_kv, S)
+    assert S % cq == 0 and S % ck == 0, (S, cq, ck)
+    nq, nk = S // cq, S // ck
+
+    qs = q.reshape(B, nq, cq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, ck, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, ck, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_block(qi, qc):
+        q0 = qi * cq
+        qpos = q0 + jnp.arange(cq)
+
+        def kv_body(carry, inp):
+            acc, mx, lse = carry
+            ki, kc, vc = inp
+            k0 = ki * ck
+            kpos = k0 + jnp.arange(ck)
+            logits = (
+                jnp.einsum(
+                    "bqkgh,bckh->bqkgc",
+                    qc.astype(jnp.float32),
+                    kc.astype(jnp.float32),
+                )
+                * scale
+            )
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+            new_mx = jnp.maximum(mx, jnp.max(logits, axis=-1))
+            alpha = jnp.exp(mx - new_mx)
+            p_exp = jnp.exp(logits - new_mx[..., None])
+            lse = lse * alpha + jnp.sum(p_exp, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqkgc,bckh->bqkgh", p_exp, vc.astype(jnp.float32)
+            )
+            return (acc, new_mx, lse), None
+
+        acc0 = jnp.zeros((B, cq, KV, G, hd), jnp.float32)
+        mx0 = jnp.full((B, cq, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, cq, KV, G), jnp.float32)
+        (acc, _, lse), _ = jax.lax.scan(
+            kv_body, (acc0, mx0, l0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(lse[..., None], 1e-30)
+        return out  # (B, cq, KV, G, hd)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array
+) -> jax.Array:
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = chunked_attention(
+        q, k, v, causal=cfg.causal, window=cfg.sliding_window
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(out, "batch", None, None)
+
+
+# -- decode ------------------------------------------------------------------
+
+def init_attn_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    hd = cfg.head_dim
+    shape = (batch, cache_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, jnp.bfloat16),
+        "v": jnp.zeros(shape, jnp.bfloat16),
+    }
+
+
+def attn_cache_logical() -> dict:
+    return {"k": ("batch", "seq", "kv", None), "v": ("batch", "seq", "kv", None)}
+
+
+def decode_attention_block(
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    cfg: ModelConfig,
+    pos: jax.Array,
+    window: int,
+) -> tuple[jax.Array, dict]:
+    """One-token decode. x: (B, 1, d). ``window>0`` = ring-buffer cache of
+    that size (slot = pos % window); otherwise linear cache of full length.
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)  # (B,1,H,hd), (B,1,KV,hd)
+    cache_len = cache["k"].shape[1]
+    slot = pos % window if window > 0 else pos  # window is static
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    new_k = shard(new_k, "batch", "seq", "kv", None)
+    new_v = shard(new_v, "batch", "seq", "kv", None)
+
+    KV = cfg.n_kv_heads
+    G = cfg.n_heads // KV
+    hd = cfg.head_dim
+    qg = q.reshape(B, KV, G, hd)
+    logits = jnp.einsum(
+        "bkgh,bskh->bkgs", qg.astype(jnp.float32), new_k.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    idx = jnp.arange(cache_len)
+    if window <= 0:
+        valid = idx <= pos
+    else:
+        # ring buffer: every slot valid once the window has wrapped
+        valid = idx < jnp.minimum(pos + 1, cache_len)
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, new_v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.n_heads, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(y, "batch", None, None), {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def ffn_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.ffn_act == "swiglu":
+        return {
+            "w1": LeafSpec((d, f), (None, "ff")),
+            "w3": LeafSpec((d, f), (None, "ff")),
+            "w2": LeafSpec((f, d), ("ff", None)),
+        }
+    return {
+        "w1": LeafSpec((d, f), (None, "ff")),
+        "w2": LeafSpec((f, d), ("ff", None)),
+    }
+
+
+def ffn_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"])
+    h = shard(h, "batch", None, "ff")
+    if "w3" in p:
+        h = jax.nn.silu(h) * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    return shard(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    s = {"embed": LeafSpec((cfg.vocab, cfg.d_model), ("vocab", None), scale=1.0)}
+    if not cfg.tie_embeddings:
+        s["head"] = LeafSpec((cfg.d_model, cfg.vocab), (None, "vocab"))
+    return s
+
+
+def embed_tokens(p: dict, tokens: jax.Array) -> jax.Array:
+    return shard(p["embed"][tokens], "batch", None, None)
+
+
+def lm_logits(p: dict, x: jax.Array) -> jax.Array:
+    head = p.get("head")
+    if head is None:
+        head = p["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return shard(logits, "batch", None, "vocab")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Mean cross-entropy; logits (B,S,V) f32, labels (B,S) int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    if b is not None:
+        out = out + b[None, None, :]
+    return out

@@ -1,0 +1,376 @@
+"""Model assembly: pattern-unit scan over heterogeneous blocks.
+
+A model is ``reps`` repetitions of a pattern unit (e.g. Jamba's
+[mamba ×3, attn, mamba ×4] with alternating dense/MoE FFNs). Parameters for
+each pattern *position* are stacked over ``reps`` and the forward runs
+``lax.scan`` over reps, applying the unit's positions in order — one
+compiled block body regardless of depth (72-layer Jamba compiles the same
+HLO size as a 8-layer toy).
+
+Three entry points:
+  * ``train_loss``   — forward + loss (next-token / masked-frame)
+  * ``prefill``      — full-sequence logits
+  * ``serve_step``   — one-token decode with per-mixer caches
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# §Perf lever (hillclimb A): when True, the layer scan indexes the stacked
+# parameter tree with dynamic_index_in_dim INSIDE the body instead of
+# passing it as scan xs. With FSDP-sharded params, xs-mode lets GSPMD hoist
+# the all-gather of the WHOLE stacked tree out of the loop (params/TP_shards
+# bytes of temp — 50 GiB/device for Jamba-398B); indexed mode gathers one
+# pattern unit per iteration (reps× less peak).
+_INDEXED_PARAMS: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_indexed_params", default=False
+)
+
+# §Perf lever (hillclimb A, change 3): remat each LAYER inside the pattern
+# unit (nested under the per-unit checkpoint). Without it, the unit's
+# backward holds every layer's gathered weights + grad intermediates live
+# at once — for Jamba's 8-layer unit that is the 60 GiB peak.
+_INNER_REMAT: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_inner_remat", default=False
+)
+
+# §Perf lever (hillclimb A, change 4): remat policy for the unit scan.
+# "full" recomputes the whole unit forward in the backward (cheapest
+# memory, +1 forward of FLOPs); "dots" saves matmul outputs and only
+# recomputes elementwise ops (kills the recompute FLOPs and the weight
+# re-reads at the cost of storing activations).
+_REMAT_POLICY: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_remat_policy", default="full"
+)
+
+
+@contextlib.contextmanager
+def remat_policy(name: str):
+    tok = _REMAT_POLICY.set(name)
+    try:
+        yield
+    finally:
+        _REMAT_POLICY.reset(tok)
+
+
+def _checkpoint(fn):
+    pol = _REMAT_POLICY.get()
+    if pol == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+@contextlib.contextmanager
+def indexed_params(on: bool = True):
+    tok = _INDEXED_PARAMS.set(on)
+    try:
+        yield
+    finally:
+        _INDEXED_PARAMS.reset(tok)
+
+
+@contextlib.contextmanager
+def inner_remat(on: bool = True):
+    tok = _INNER_REMAT.set(on)
+    try:
+        yield
+    finally:
+        _INNER_REMAT.reset(tok)
+
+from ..distributed import shard
+from .config import ModelConfig
+from . import layers, moe, ssm, xlstm
+from .spec import LeafSpec, stack_specs
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+def _mixer_specs(cfg: ModelConfig, kind: str) -> dict:
+    return {
+        "attn": layers.attn_specs,
+        "mamba": ssm.mamba_specs,
+        "mlstm": xlstm.mlstm_specs,
+        "slstm": xlstm.slstm_specs,
+    }[kind](cfg)
+
+
+def build_specs(cfg: ModelConfig) -> dict:
+    """Full parameter LeafSpec tree for an architecture."""
+    blocks = []
+    for pos in range(cfg.unit):
+        unit: dict = {
+            "norm1": layers.norm_specs(cfg),
+            "mixer": _mixer_specs(cfg, cfg.mixer_at(pos)),
+        }
+        f = cfg.ffn_at(pos)
+        if f == "dense":
+            unit["norm2"] = layers.norm_specs(cfg)
+            unit["ffn"] = layers.ffn_specs(cfg)
+        elif f == "moe":
+            unit["norm2"] = layers.norm_specs(cfg)
+            unit["ffn"] = moe.moe_specs(cfg)
+        blocks.append(stack_specs(unit, cfg.reps))
+
+    tree: dict = {
+        "embed": layers.embed_specs(cfg),
+        "blocks": blocks,
+        "final_norm": layers.norm_specs(cfg),
+    }
+    if cfg.encoder_only:
+        tree["classifier"] = LeafSpec((cfg.d_model, cfg.vocab), (None, "vocab"))
+        tree["mask_token"] = LeafSpec((cfg.d_model,), (None,), scale=0.02)
+        del tree["embed"]["head"]
+    if cfg.frontend == "vision":
+        # learned projector applied to the (stubbed) patch embeddings
+        tree["projector"] = LeafSpec((cfg.d_model, cfg.d_model), (None, None))
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(
+    p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array, pos: int
+) -> jax.Array:
+    mix = cfg.mixer_at(pos)
+    h = layers.apply_norm(p["norm1"], x, cfg.norm_eps)
+    if mix == "attn":
+        h = layers.attention_block(p["mixer"], h, cfg, positions)
+    elif mix == "mamba":
+        h = ssm.mamba_block(p["mixer"], h, cfg)
+    elif mix == "mlstm":
+        h = xlstm.mlstm_block(p["mixer"], h, cfg)
+    else:
+        h = xlstm.slstm_block(p["mixer"], h, cfg)
+    x = x + h
+    f = cfg.ffn_at(pos)
+    if f != "none":
+        h = layers.apply_norm(p["norm2"], x, cfg.norm_eps)
+        if f == "dense":
+            h = layers.ffn_block(p["ffn"], h, cfg)
+        else:
+            h = moe.moe_block(p["ffn"], h, cfg)
+        x = x + h
+    return x
+
+
+def _apply_unit(
+    unit_params: list[dict],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+) -> jax.Array:
+    nested = _INNER_REMAT.get()
+    for pos, p in enumerate(unit_params):
+        if nested:
+            x = _checkpoint(
+                functools.partial(_apply_layer, cfg=cfg, positions=positions, pos=pos)
+            )(p, x)
+        else:
+            x = _apply_layer(p, x, cfg, positions, pos)
+    return x
+
+
+def backbone(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    remat: bool = True,
+) -> jax.Array:
+    if _INDEXED_PARAMS.get():
+        blocks = params["blocks"]
+
+        def body(carry, r):
+            unit = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, r, 0, keepdims=False),
+                blocks,
+            )
+            out = _apply_unit(unit, carry, cfg, positions)
+            return out, None
+
+        if remat:
+            body = _checkpoint(body)
+        x, _ = jax.lax.scan(body, x, jnp.arange(cfg.reps))
+    else:
+
+        def body(carry, unit_params):
+            out = _apply_unit(unit_params, carry, cfg, positions)
+            return out, None
+
+        if remat:
+            body = _checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    return layers.apply_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params: Params, batch: dict, cfg: ModelConfig):
+    """Returns (x (B,S,d), positions (B,S), loss_labels, loss_mask)."""
+    if cfg.frontend == "audio":
+        feats = batch["feats"]
+        mask = batch["mask"]
+        x = jnp.where(
+            mask[..., None], params["mask_token"].astype(feats.dtype), feats
+        )
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return x, positions, batch.get("labels"), mask
+    if cfg.frontend == "vision":
+        patches = jnp.einsum("bpd,de->bpe", batch["patches"], params["projector"])
+        tok_emb = layers.embed_tokens(params["embed"], batch["tokens"])
+        x = jnp.concatenate([patches.astype(tok_emb.dtype), tok_emb], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        npatch = patches.shape[1]
+        mask = jnp.concatenate(
+            [
+                jnp.zeros((b, npatch), bool),
+                jnp.ones((b, tok_emb.shape[1]), bool),
+            ],
+            axis=1,
+        )
+        labels = batch.get("labels")
+        if labels is not None:
+            # pad labels over the patch prefix (ignored via mask)
+            labels = jnp.concatenate(
+                [jnp.zeros((b, npatch), labels.dtype), labels], axis=1
+            )
+        return x, positions, labels, mask
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = layers.embed_tokens(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, positions, batch.get("labels"), None
+
+
+def train_loss(params: Params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    x, positions, labels, mask = _embed_inputs(params, batch, cfg)
+    x = backbone(params, x, cfg, positions)
+    if cfg.encoder_only:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["classifier"]).astype(
+            jnp.float32
+        )
+        return layers.softmax_xent(logits, labels, mask)
+    logits = layers.lm_logits(params["embed"], x)
+    shifted = jnp.roll(labels, -1, axis=1)
+    if mask is None:
+        mask = jnp.ones_like(labels, bool)
+    mask = mask.at[:, -1].set(False)  # last position has no next token
+    return layers.softmax_xent(logits, shifted, mask)
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    x, positions, _, _ = _embed_inputs(params, batch, cfg)
+    x = backbone(params, x, cfg, positions)
+    if cfg.encoder_only:
+        return jnp.einsum("bsd,dv->bsv", x, params["classifier"]).astype(jnp.float32)
+    return layers.lm_logits(params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> list:
+    """Cache pytree: one entry per pattern position, leaves stacked (reps,…).
+
+    ``cache_len`` is the KV-cache length for attention positions (the ring
+    window when the sliding variant is active); recurrent mixers carry O(1)
+    state.
+    """
+    caches = []
+    for pos in range(cfg.unit):
+        mix = cfg.mixer_at(pos)
+        if mix == "attn":
+            c = layers.init_attn_cache(cfg, batch, cache_len)
+        elif mix == "mamba":
+            c = ssm.init_mamba_cache(cfg, batch)
+        elif mix == "mlstm":
+            c = xlstm.init_mlstm_cache(cfg, batch)
+        else:
+            c = xlstm.init_slstm_cache(cfg, batch)
+        caches.append(
+            jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.reps,) + a.shape), c)
+        )
+    return caches
+
+
+def cache_logical(cfg: ModelConfig) -> list:
+    out = []
+    for pos in range(cfg.unit):
+        mix = cfg.mixer_at(pos)
+        log = {
+            "attn": layers.attn_cache_logical,
+            "mamba": ssm.mamba_cache_logical,
+            "mlstm": xlstm.mlstm_cache_logical,
+            "slstm": xlstm.slstm_cache_logical,
+        }[mix]()
+        out.append(jax.tree.map(lambda l: (None,) + tuple(l), log, is_leaf=lambda v: isinstance(v, tuple)))
+    return out
+
+
+def serve_step(
+    params: Params,
+    cache: list,
+    batch: dict,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    window: int = 0,
+) -> tuple[jax.Array, list]:
+    """Decode ONE token. batch: {"tokens": (B, 1)}; pos: scalar int32.
+
+    ``window > 0`` activates the ring-buffer sliding-window cache (the
+    long_500k variant for full-attention archs).
+    """
+    tokens = batch["tokens"]
+    x = layers.embed_tokens(params["embed"], tokens)
+
+    def body(carry, xs):
+        xx = carry
+        unit_params, unit_cache = xs
+        new_caches = []
+        for upos in range(cfg.unit):
+            mix = cfg.mixer_at(upos)
+            p, c = unit_params[upos], unit_cache[upos]
+            h = layers.apply_norm(p["norm1"], xx, cfg.norm_eps)
+            if mix == "attn":
+                h, c_new = layers.decode_attention_block(
+                    p["mixer"], h, c, cfg, pos, window
+                )
+            elif mix == "mamba":
+                h, c_new = ssm.mamba_decode_step(p["mixer"], h, c, cfg)
+            elif mix == "mlstm":
+                h, c_new = xlstm.mlstm_decode_step(p["mixer"], h, c, cfg)
+            else:
+                h, c_new = xlstm.slstm_decode_step(p["mixer"], h, c, cfg)
+            xx = xx + h
+            f = cfg.ffn_at(upos)
+            if f != "none":
+                h = layers.apply_norm(p["norm2"], xx, cfg.norm_eps)
+                h = (
+                    layers.ffn_block(p["ffn"], h, cfg)
+                    if f == "dense"
+                    else moe.moe_block(p["ffn"], h, cfg)
+                )
+                xx = xx + h
+            new_caches.append(c_new)
+        return xx, new_caches
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.lm_logits(params["embed"], x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts FFN with capacity-bounded gather routing and
+expert-parallel execution via ``shard_map``.
+
+Routing (per token): top-k softmax gates over E experts. Execution: each
+``model``-axis shard owns E/|model| experts; tokens are *replicated* across
+the model axis (they already are, post-attention), every shard gathers the
+top-C tokens routed to each of its local experts, computes them, scatter-
+adds the gated outputs, and a ``psum`` over ``model`` combines shards.
+
+This baseline trades an all-to-all for one psum of the (tokens, d) output —
+simple and robust across expert counts (128 for qwen3-moe, 16 for jamba /
+llama4). §Perf iterates on it.
+
+Without an active mesh (CPU smoke tests) the same inner routine runs over
+ALL experts locally — identical semantics, zero collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed import batch_axes, current_mesh, shard
+from .config import ModelConfig
+from .spec import LeafSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    # the "ff" logical on the per-expert hidden dim is inert under the
+    # default rules ("model" is consumed by "experts") but lets the 2D
+    # weight-stationary serving layout shard expert FFNs over "data" too.
+    s: dict = {
+        "router": LeafSpec((d, e), (None, None), dtype=jnp.float32),
+        "w1": LeafSpec((e, d, f), ("experts", None, "ff")),
+        "w3": LeafSpec((e, d, f), ("experts", None, "ff")),
+        "w2": LeafSpec((e, f, d), ("experts", "ff", None)),
+    }
+    if cfg.shared_expert:
+        s["sw1"] = LeafSpec((d, f), (None, "ff"))
+        s["sw3"] = LeafSpec((d, f), (None, "ff"))
+        s["sw2"] = LeafSpec((f, d), ("ff", None))
+    return s
+
+
+def _route(x2d: jax.Array, router: jax.Array, top_k: int):
+    """x2d: (T, d) -> gates (T, k) f32, idx (T, k) int32."""
+    logits = x2d.astype(jnp.float32) @ router  # (T, E)
+    gate_vals, idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+    return gates, idx
+
+
+def _expert_compute(
+    x2d: jax.Array,
+    gates: jax.Array,
+    idx: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    e_offset: int | jax.Array,
+    capacity: int,
+) -> jax.Array:
+    """Compute the local experts' contribution for (T, d) tokens.
+
+    w1/w3: (E_local, d, f); w2: (E_local, f, d). Tokens routed to local
+    expert ``e`` beyond ``capacity`` are dropped (standard capacity rule).
+    """
+    t, d = x2d.shape
+    e_local = w1.shape[0]
+
+    def one_expert(we1, we3, we2, e_local_idx):
+        e_global = e_offset + e_local_idx
+        routed = idx == e_global  # (T, k)
+        gate_e = jnp.sum(jnp.where(routed, gates, 0.0), axis=-1)  # (T,)
+        score = jnp.where(gate_e > 0, gate_e, -1.0)
+        top_score, top_idx = jax.lax.top_k(score, capacity)  # (C,)
+        sel = jnp.maximum(top_score, 0.0)  # 0 for non-routed padding slots
+        xe = jnp.take(x2d, top_idx, axis=0)  # (C, d)
+        h = jax.nn.silu(xe @ we1) * (xe @ we3)  # (C, f_local)
+        ye = (h @ we2) * sel[:, None].astype(x2d.dtype)  # (C, d) (partial if f sharded)
+        return jnp.zeros((t, d), x2d.dtype).at[top_idx].add(ye)
+
+    contribs = jax.vmap(one_expert, in_axes=(0, 0, 0, 0))(
+        w1, w3, w2, jnp.arange(e_local)
+    )
+    return jnp.sum(contribs, axis=0)
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    capacity = max(
+        int(b * s * cfg.top_k / cfg.n_experts * cfg.capacity_factor), 8
+    )
+    capacity = min(capacity, b * s)
+    mesh = current_mesh()
+    gates, idx = _route(x2d, p["router"], cfg.top_k)
+
+    from ..distributed import spec_for
+
+    def _axes(entry) -> tuple:
+        if entry is None:
+            return ()
+        return entry if isinstance(entry, tuple) else (entry,)
+
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes)) if mesh is not None else {}
+    w1spec = spec_for(("experts", None, "ff"), p["w1"].shape) if mesh else None
+    e_axes = _axes(w1spec[0]) if w1spec and len(w1spec) > 0 else ()
+    f_axes = _axes(w1spec[2]) if w1spec and len(w1spec) > 2 else ()
+
+    if mesh is not None and len(e_axes) == 1 and cfg.n_experts % sizes[e_axes[0]] == 0:
+        e_axis = e_axes[0]
+        e_local = cfg.n_experts // sizes[e_axis]
+        psum_axes = (e_axis,) + tuple(f_axes)
+        # tokens stay sharded along batch axes not consumed by the weights;
+        # tiny token counts (decode) fall back to replicated tokens.
+        baxes = tuple(
+            a for a in batch_axes() if a in sizes and a not in psum_axes
+        )
+        tok_shards = 1
+        for a in baxes:
+            tok_shards *= sizes[a]
+        t = b * s
+        if baxes and t % tok_shards == 0 and t // tok_shards >= 8:
+            cap_local = min(max(capacity // tok_shards, 8), t // tok_shards)
+            tok_spec = P(baxes if len(baxes) != 1 else baxes[0], None)
+        else:
+            cap_local = min(capacity, t)
+            tok_spec = P(None, None)
+        ew1 = P(*w1spec)
+        ew2 = P(*spec_for(("experts", "ff", None), p["w2"].shape))
+
+        def local_fn(x2d_l, gates_l, idx_l, w1_l, w3_l, w2_l):
+            eidx = jax.lax.axis_index(e_axis)
+            out = _expert_compute(
+                x2d_l, gates_l, idx_l, w1_l, w3_l, w2_l,
+                eidx * e_local, cap_local,
+            )
+            return jax.lax.psum(out, psum_axes)
+
+        out2d = jax.shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=(tok_spec, tok_spec, tok_spec, ew1, ew1, ew2),
+            out_specs=tok_spec,
+            check_vma=False,
+        )(x2d, gates, idx, p["w1"], p["w3"], p["w2"])
+    else:
+        out2d = _expert_compute(
+            x2d, gates, idx, p["w1"], p["w3"], p["w2"], 0, capacity
+        )
+
+    out = out2d.reshape(b, s, d)
+    if "sw1" in p:
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["sw1"])) * jnp.einsum(
+            "bsd,df->bsf", x, p["sw3"]
+        )
+        out = out + jnp.einsum("bsf,fd->bsd", h, p["sw2"])
+    return shard(out, "batch", None, None)
+
+
+def router_aux_loss(x2d: jax.Array, router: jax.Array, top_k: int, n_experts: int) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (importance * load)."""
+    logits = x2d.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    importance = jnp.mean(probs, axis=0)
+    _, idx = jax.lax.top_k(logits, top_k)
+    load = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, n_experts), axis=1), axis=0
+    )
+    return n_experts * jnp.sum(importance * load)

@@ -1,0 +1,123 @@
+"""Parameter-spec trees: one definition drives init, abstract shapes
+(for the allocation-free dry-run) and sharding.
+
+A model's parameters are described as a pytree of :class:`LeafSpec`; from
+it we derive (a) ``jax.ShapeDtypeStruct`` trees, (b) NamedShardings via the
+logical-axis rules in :mod:`repro.distributed`, and (c) materialized
+initial values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import distributed
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = -1.0  # -1 -> 1/sqrt(fan_in) with fan_in = shape[-2] or [-1]
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def stack_specs(tree, reps: int):
+    """Prepend a layer-stacking dim (replicated) to every LeafSpec."""
+    return jax.tree.map(
+        lambda s: LeafSpec((reps,) + s.shape, (None,) + s.logical, s.init, s.scale, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
+
+
+def abstract_params(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
+
+
+def param_pspecs(tree, fsdp_axis: str | None = None):
+    """PartitionSpec tree (requires an active mesh via jax.set_mesh).
+
+    ``fsdp_axis``: additionally shard each leaf's largest still-replicated
+    dim over that mesh axis (ZeRO-3 style) when divisible — required for
+    the 398B-class configs to fit HBM. GSPMD then inserts the per-layer
+    all-gathers / reduce-scatters automatically.
+    """
+    base = jax.tree.map(
+        lambda s: distributed.spec_for(s.logical, s.shape),
+        tree,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
+    if fsdp_axis is None:
+        return base
+    mesh = distributed.current_mesh()
+    if mesh is None or fsdp_axis not in mesh.axis_names:
+        return base
+    axis_size = dict(zip(mesh.axis_names, mesh.axis_sizes))[fsdp_axis]
+
+    def add_fsdp(s: LeafSpec, spec):
+        entries = list(spec) + [None] * (len(s.shape) - len(spec))
+        # pick the largest unsharded dim divisible by the axis size
+        cand = [
+            (dim, i)
+            for i, (dim, e) in enumerate(zip(s.shape, entries))
+            if e is None and dim % axis_size == 0 and dim >= axis_size
+        ]
+        if not cand:
+            return spec
+        _, i = max(cand)
+        entries[i] = fsdp_axis
+        from jax.sharding import PartitionSpec as P
+
+        return P(*entries)
+
+    return jax.tree.map(
+        add_fsdp,
+        tree,
+        base,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
+
+
+def init_params(tree, key: jax.Array):
+    """Materialize initial parameter values (per-leaf folded keys)."""
+    leaves = jax.tree_util.tree_leaves_with_path(
+        tree, is_leaf=lambda x: isinstance(x, LeafSpec)
+    )
+
+    def make(i: int, s: LeafSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        scale = s.scale if s.scale > 0 else fan_in ** -0.5
+        k = jax.random.fold_in(key, i)
+        return (scale * jax.random.normal(k, s.shape, jnp.float32)).astype(s.dtype)
+
+    vals = [make(i, s) for i, (_, s) in enumerate(leaves)]
+    treedef = jax.tree_util.tree_structure(
+        tree, is_leaf=lambda x: isinstance(x, LeafSpec)
+    )
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def count_params(tree) -> int:
+    sizes = jax.tree.map(
+        lambda s: int(jnp.prod(jnp.array(s.shape))) if isinstance(s, LeafSpec) else 0,
+        tree,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
+    return sum(jax.tree_util.tree_leaves(sizes))

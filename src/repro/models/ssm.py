@@ -1,0 +1,166 @@
+"""Mamba-1 selective-SSM mixer (for xLSTM-family hybrids see xlstm.py).
+
+Training/prefill uses a chunked associative scan: the sequence is cut into
+chunks (lax.scan carries the SSM state across chunks; within a chunk a
+parallel ``associative_scan`` runs on the time axis). This keeps the
+(B, chunk, d_inner, d_state) working set bounded while exposing
+MXU-friendly parallelism — the TPU-native adaptation of the CUDA selective
+scan. ``d_inner`` is TP-sharded (logical "ff").
+
+Decode carries (conv_state, ssm_state) and is O(1) per token — this is what
+makes ``long_500k`` native for SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+
+# §Perf lever: dtype of the chunked selective-scan state tensors
+# (adt/drive/h are the dominant HBM traffic of mamba layers). f32 is the
+# numerically safe default; bf16 halves the traffic (decays are in (0,1],
+# so products stay representable; validated against the f32 path in tests).
+_SSM_STATE_DTYPE: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_ssm_state_dtype", default="float32"
+)
+
+
+@contextlib.contextmanager
+def ssm_state_dtype(name: str):
+    tok = _SSM_STATE_DTYPE.set(name)
+    try:
+        yield
+    finally:
+        _SSM_STATE_DTYPE.reset(tok)
+
+from ..distributed import shard
+from .config import ModelConfig
+from .layers import causal_conv1d
+from .spec import LeafSpec
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_in = cfg.expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 1)
+    return d_in, dt_rank, cfg.d_state
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, ds = _dims(cfg)
+    return {
+        "in_proj": LeafSpec((d, 2 * d_in), (None, "ff")),
+        "conv_w": LeafSpec((cfg.d_conv, d_in), (None, "ff"), scale=0.5),
+        "conv_b": LeafSpec((d_in,), ("ff",), "zeros"),
+        "x_proj": LeafSpec((d_in, dt_rank + 2 * ds), ("ff", None)),
+        "dt_proj": LeafSpec((dt_rank, d_in), (None, "ff")),
+        "dt_bias": LeafSpec((d_in,), ("ff",), "zeros"),
+        "a_log": LeafSpec((d_in, ds), ("ff", None), "ones"),
+        "d_skip": LeafSpec((d_in,), ("ff",), "ones"),
+        "out_proj": LeafSpec((d_in, d), ("ff", None)),
+    }
+
+
+def _ssm_inputs(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Shared pre-scan computation. x: (B, S, d) -> (u, dt, Bc, Cc, z)."""
+    d_in, dt_rank, ds = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xz = shard(xz, "batch", None, "ff")
+    u, z = jnp.split(xz, 2, axis=-1)
+    return u, z
+
+
+def _ssm_params(p: dict, u: jax.Array, cfg: ModelConfig):
+    d_in, dt_rank, ds = _dims(cfg)
+    dbc = jnp.einsum("bse,ef->bsf", u, p["x_proj"])
+    dt, bc, cc = jnp.split(dbc, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt, p["dt_proj"]) + p["dt_bias"]
+    ).astype(jnp.float32)  # (B,S,d_in)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (d_in, ds)
+    return dt, bc.astype(jnp.float32), cc.astype(jnp.float32), a
+
+
+def mamba_block(
+    p: dict, x: jax.Array, cfg: ModelConfig, chunk: int = 256
+) -> jax.Array:
+    """Full-sequence forward. x: (B, S, d)."""
+    b, s, _ = x.shape
+    d_in, dt_rank, ds = _dims(cfg)
+    u, z = _ssm_inputs(p, x, cfg)
+    u = jax.nn.silu(causal_conv1d(u, p["conv_w"], p["conv_b"]))
+    dt, bc, cc, a = _ssm_params(p, u, cfg)
+
+    uf = u.astype(jnp.float32)
+    # decay and drive per step: adt (B,S,d_in,ds), drive (B,S,d_in,ds)
+    c = min(chunk, s)
+    assert s % c == 0
+    nchunks = s // c
+
+    sdt = jnp.dtype(_SSM_STATE_DTYPE.get())
+
+    def chunk_body(h0, args):
+        dt_c, bc_c, cc_c, u_c = args  # (B,c,...)
+        adt = jnp.exp(dt_c[..., None] * a).astype(sdt)  # (B,c,d_in,ds)
+        drive = (dt_c[..., None] * u_c[..., None] * bc_c[:, :, None, :]).astype(sdt)
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(op, (adt, drive), axis=1)
+        h = a_cum * h0[:, None].astype(sdt) + b_cum  # (B,c,d_in,ds)
+        y = jnp.einsum("bcds,bcs->bcd", h.astype(jnp.float32), cc_c)
+        return h[:, -1].astype(jnp.float32), y
+
+    dt_s = dt.reshape(b, nchunks, c, d_in).transpose(1, 0, 2, 3)
+    bc_s = bc.reshape(b, nchunks, c, ds).transpose(1, 0, 2, 3)
+    cc_s = cc.reshape(b, nchunks, c, ds).transpose(1, 0, 2, 3)
+    u_s = uf.reshape(b, nchunks, c, d_in).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((b, d_in, ds), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, (dt_s, bc_s, cc_s, u_s))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d_in)
+    y = y + uf * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return shard(out, "batch", None, None)
+
+
+# -- decode -------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> dict:
+    d_in, _, ds = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, d_in, ds), jnp.float32),
+    }
+
+
+def mamba_cache_logical() -> dict:
+    return {"conv": ("batch", None, "ff"), "ssm": ("batch", "ff", None)}
+
+
+def mamba_decode_step(
+    p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d); O(1) state update."""
+    b = x.shape[0]
+    d_in, dt_rank, ds = _dims(cfg)
+    u, z = _ssm_inputs(p, x, cfg)  # (B,1,d_in)
+    conv_in = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+    u1 = causal_conv1d(conv_in, p["conv_w"], p["conv_b"])[:, -1:, :]
+    u1 = jax.nn.silu(u1)
+    dt, bc, cc, a = _ssm_params(p, u1, cfg)
+    adt = jnp.exp(dt[:, 0, :, None] * a)  # (B,d_in,ds)
+    drive = dt[:, 0, :, None] * u1.astype(jnp.float32)[:, 0, :, None] * bc[:, 0, None, :]
+    h = adt * cache["ssm"] + drive
+    y = jnp.einsum("bds,bs->bd", h, cc[:, 0])[:, None, :]
+    y = y + u1.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_cache = {"conv": conv_in[:, 1:, :].astype(jnp.bfloat16), "ssm": h}
+    return shard(out, "batch", None, None), new_cache

@@ -1,0 +1,157 @@
+"""The paper's own FL models: MLP / CNN (FMNIST, §VI-A) and a compact
+ResNet (CIFAR-10). Pure-JAX; parameters are plain pytrees so the PRoBit+
+pipeline (ravel → quantize → aggregate) applies unchanged.
+
+The container is CPU-only, so the benchmark harness defaults to the MLP /
+small-CNN variants; the ResNet matches the paper's ResNet-18 block layout
+at reduced width (full width selectable via ``width=64``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, scale=None):
+    scale = scale or shape[0] ** -0.5
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP (fast CPU experiments)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, in_dim=784, hidden=128, classes=10):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": _dense_init(k1, (in_dim, hidden)),
+        "b1": jnp.zeros(hidden),
+        "w2": _dense_init(k2, (hidden, hidden)),
+        "b2": jnp.zeros(hidden),
+        "w3": _dense_init(k3, (hidden, classes)),
+        "b3": jnp.zeros(classes),
+    }
+
+
+def mlp_logits(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper's FMNIST model)
+# ---------------------------------------------------------------------------
+
+def init_cnn(key, in_ch=1, classes=10, width=16, img=28):
+    ks = jax.random.split(key, 4)
+    flat = (img // 4) ** 2 * 2 * width
+    return {
+        "c1": _dense_init(ks[0], (3, 3, in_ch, width), scale=0.1),
+        "c2": _dense_init(ks[1], (3, 3, width, 2 * width), scale=0.1),
+        "w1": _dense_init(ks[2], (flat, 128)),
+        "b1": jnp.zeros(128),
+        "w2": _dense_init(ks[3], (128, classes)),
+        "b2": jnp.zeros(classes),
+    }
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_logits(params, x):
+    """x: (B, H, W, C)."""
+    h = _pool(jax.nn.relu(_conv(x, params["c1"])))
+    h = _pool(jax.nn.relu(_conv(h, params["c2"])))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet (paper's CIFAR-10 model, compact)
+# ---------------------------------------------------------------------------
+
+def init_resnet(key, classes=10, width=16, blocks=(2, 2, 2, 2), in_ch=3):
+    """ResNet-18 block layout; width=64 recovers the paper's scale."""
+    params: dict = {}
+    k = iter(jax.random.split(key, 64))
+    params["stem"] = _dense_init(next(k), (3, 3, in_ch, width), scale=0.1)
+    ch = width
+    for si, n in enumerate(blocks):
+        out_ch = width * (2**si)
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blk = {
+                "c1": _dense_init(next(k), (3, 3, ch, out_ch), scale=0.1),
+                "c2": _dense_init(next(k), (3, 3, out_ch, out_ch), scale=0.1),
+                "g1": jnp.ones(out_ch),
+                "b1": jnp.zeros(out_ch),
+                "g2": jnp.ones(out_ch),
+                "b2": jnp.zeros(out_ch),
+            }
+            if stride != 1 or ch != out_ch:
+                blk["proj"] = _dense_init(next(k), (1, 1, ch, out_ch), scale=0.1)
+            params[f"s{si}b{bi}"] = blk
+            ch = out_ch
+    params["head_w"] = _dense_init(next(k), (ch, classes))
+    params["head_b"] = jnp.zeros(classes)
+    return params
+
+
+def _groupnorm(x, g, b, groups=8):
+    n, h, w, c = x.shape
+    groups = min(groups, c)
+    xg = x.reshape(n, h, w, groups, c // groups)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(n, h, w, c) * g + b
+
+
+def resnet_logits(params, x, blocks=(2, 2, 2, 2)):
+    h = jax.nn.relu(_conv(x, params["stem"]))
+    for si, n in enumerate(blocks):
+        for bi in range(n):
+            blk = params[f"s{si}b{bi}"]
+            stride = 2 if (bi == 0 and si > 0) else 1
+            r = _conv(h, blk["c1"], stride)
+            r = jax.nn.relu(_groupnorm(r, blk["g1"], blk["b1"]))
+            r = _conv(r, blk["c2"])
+            r = _groupnorm(r, blk["g2"], blk["b2"])
+            sc = h if "proj" not in blk else _conv(h, blk["proj"], stride)
+            h = jax.nn.relu(r + sc)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["head_w"] + params["head_b"]
+
+
+MODELS = {
+    "mlp": (init_mlp, mlp_logits),
+    "cnn": (init_cnn, cnn_logits),
+    "resnet": (init_resnet, resnet_logits),
+}
+
+
+def xent_loss(logits_fn, params, batch):
+    logits = logits_fn(params, batch["x"])
+    labels = batch["y"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def accuracy(logits_fn, params, batch):
+    logits = logits_fn(params, batch["x"])
+    return jnp.mean(jnp.argmax(logits, -1) == batch["y"])

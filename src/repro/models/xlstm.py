@@ -1,0 +1,276 @@
+"""xLSTM mixers [arXiv:2405.04517]: mLSTM (matrix memory, chunked-parallel)
+and sLSTM (scalar memory, strictly sequential exponential gating).
+
+The mLSTM cell is run in *chunkwise-parallel* form — the linear-attention-
+with-decay trick: within a chunk all timesteps are computed with dense
+einsums (MXU-friendly); a lax.scan carries the stabilized matrix state
+(C_hat, n_hat, m) across chunks. The log-space stabilizer m follows the
+xLSTM paper's max-trick. The sLSTM cell has a true sequential dependency
+(exponential gating on a scalar memory with recurrent weights), so it runs
+under lax.scan over time; xLSTM-350m places sLSTM in 1 of every 8 blocks.
+
+Decode for both cells is an O(1) state update, making long_500k native.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard
+from .config import ModelConfig
+from .layers import causal_conv1d
+from .spec import LeafSpec
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    dup = int(cfg.proj_factor * cfg.d_model)
+    return dup, dup // cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dup, hd = _mlstm_dims(cfg)
+    h = cfg.n_heads
+    return {
+        "w_up": LeafSpec((d, 2 * dup), (None, "ff")),
+        "conv_w": LeafSpec((cfg.d_conv, dup), (None, "ff"), scale=0.5),
+        "conv_b": LeafSpec((dup,), ("ff",), "zeros"),
+        "wq": LeafSpec((dup, dup), (None, "ff")),
+        "wk": LeafSpec((dup, dup), (None, "ff")),
+        "wv": LeafSpec((dup, dup), (None, "ff")),
+        "wi": LeafSpec((dup, h), (None, None), scale=0.01),
+        "bi": LeafSpec((h,), (None,), "zeros"),
+        "wf": LeafSpec((dup, h), (None, None), scale=0.01),
+        "bf": LeafSpec((h,), (None,), "ones"),  # bias toward remembering
+        "w_down": LeafSpec((dup, d), ("ff", None)),
+    }
+
+
+def _mlstm_qkvg(p: dict, x: jax.Array, cfg: ModelConfig):
+    b, s, _ = x.shape
+    dup, hd = _mlstm_dims(cfg)
+    h = cfg.n_heads
+    ug = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    ug = shard(ug, "batch", None, "ff")
+    u, g = jnp.split(ug, 2, axis=-1)
+    u = jax.nn.silu(causal_conv1d(u, p["conv_w"], p["conv_b"]))
+    q = jnp.einsum("bse,ef->bsf", u, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bse,ef->bsf", u, p["wk"]).reshape(b, s, h, hd) * hd**-0.5
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"]).reshape(b, s, h, hd)
+    li = (jnp.einsum("bse,eh->bsh", u, p["wi"]) + p["bi"]).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("bse,eh->bsh", u, p["wf"]) + p["bf"]).astype(jnp.float32)
+    )
+    return q, k, v, li, lf, g
+
+
+def _mlstm_chunk(carry, args):
+    """One chunk of the stabilized chunkwise-parallel mLSTM cell.
+
+    carry: C_hat (B,H,hd,hd), n_hat (B,H,hd), m (B,H)
+    args:  q,k,v (B,c,H,hd); li,lf (B,c,H)
+    """
+    c_hat, n_hat, m = carry
+    q, k, v, li, lf = args
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    bcum = jnp.cumsum(lf, axis=1)  # (B,c,H) inclusive decay from chunk start
+    btot = bcum[:, -1]  # (B,H)
+    s_t = li - bcum  # log weight of step t relative to chunk end (+btot)
+
+    # ---- state update (to chunk end) ----
+    m_new = jnp.maximum(m + btot, btot + jnp.max(s_t, axis=1))
+    w_end = jnp.exp(btot[:, None] + s_t - m_new[:, None])  # (B,c,H)
+    decay_old = jnp.exp(m + btot - m_new)  # (B,H)
+    c_new = decay_old[..., None, None] * c_hat + jnp.einsum(
+        "bch,bchk,bchv->bhkv", w_end, kf, vf
+    )
+    n_new = decay_old[..., None] * n_hat + jnp.einsum("bch,bchk->bhk", w_end, kf)
+
+    # ---- outputs within chunk ----
+    run_max = jax.lax.cummax(s_t, axis=1)  # (B,c,H): max_{s<=t} s_s
+    m_t = jnp.maximum(m[:, None] + bcum, bcum + run_max)  # (B,c,H)
+    inter_scale = jnp.exp(m[:, None] + bcum - m_t)  # (B,c,H)
+    inter_y = jnp.einsum("bchk,bhkv->bchv", qf, c_hat) * inter_scale[..., None]
+    inter_n = jnp.einsum("bchk,bhk->bch", qf, n_hat) * inter_scale
+
+    # intra-chunk: D[t,s] = exp(b_t + s_s - m_t) for s <= t
+    cl = q.shape[1]
+    logd = bcum[:, :, None, :] + s_t[:, None, :, :] - m_t[:, :, None, :]
+    causal = jnp.tril(jnp.ones((cl, cl), bool))
+    dmat = jnp.where(causal[None, :, :, None], jnp.exp(logd), 0.0)  # (B,c,c,H)
+    qk = jnp.einsum("bchk,bshk->bcsh", qf, kf)  # (B,c,c,H)
+    intra_y = jnp.einsum("bcsh,bcsh,bshv->bchv", qk, dmat, vf)
+    intra_n = jnp.einsum("bcsh,bcsh->bch", qk, dmat)
+
+    denom = jnp.maximum(jnp.abs(inter_n + intra_n), jnp.exp(-m_t))
+    h_out = (inter_y + intra_y) / denom[..., None]
+    return (c_new, n_new, m_new), h_out.astype(q.dtype)
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ModelConfig, chunk: int = 256) -> jax.Array:
+    b, s, d = x.shape
+    dup, hd = _mlstm_dims(cfg)
+    h = cfg.n_heads
+    q, k, v, li, lf, g = _mlstm_qkvg(p, x, cfg)
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+
+    def to_chunks(t):
+        return t.reshape(b, n, c, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    carry0 = (
+        jnp.zeros((b, h, hd, hd), jnp.float32),
+        jnp.zeros((b, h, hd), jnp.float32),
+        jnp.full((b, h), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(
+        _mlstm_chunk, carry0, tuple(map(to_chunks, (q, k, v, li, lf)))
+    )
+    hseq = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, dup)
+    out = jnp.einsum("bse,ed->bsd", hseq * jax.nn.silu(g), p["w_down"])
+    return shard(out, "batch", None, None)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    dup, hd = _mlstm_dims(cfg)
+    h = cfg.n_heads
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, dup), jnp.bfloat16),
+    }
+
+
+def mlstm_cache_logical() -> dict:
+    return {
+        "c": ("batch", None, "ff", None),
+        "n": ("batch", None, "ff"),
+        "m": ("batch", None),
+        "conv": ("batch", None, "ff"),
+    }
+
+
+def mlstm_decode_step(
+    p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    dup, hd = _mlstm_dims(cfg)
+    h = cfg.n_heads
+    ug = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    u, g = jnp.split(ug, 2, axis=-1)
+    conv_in = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+    u1 = jax.nn.silu(causal_conv1d(conv_in, p["conv_w"], p["conv_b"])[:, -1:, :])
+    q = jnp.einsum("bse,ef->bsf", u1, p["wq"]).reshape(b, h, hd)
+    k = jnp.einsum("bse,ef->bsf", u1, p["wk"]).reshape(b, h, hd) * hd**-0.5
+    v = jnp.einsum("bse,ef->bsf", u1, p["wv"]).reshape(b, h, hd)
+    li = (jnp.einsum("be,eh->bh", u1[:, 0], p["wi"]) + p["bi"]).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("be,eh->bh", u1[:, 0], p["wf"]) + p["bf"]).astype(jnp.float32)
+    )
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    m_new = jnp.maximum(cache["m"] + lf, li)
+    decay = jnp.exp(cache["m"] + lf - m_new)
+    inj = jnp.exp(li - m_new)
+    c_new = decay[..., None, None] * cache["c"] + inj[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n_new = decay[..., None] * cache["n"] + inj[..., None] * kf
+    y = jnp.einsum("bhk,bhkv->bhv", qf, c_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_new)), jnp.exp(-m_new))
+    hvec = (y / denom[..., None]).reshape(b, 1, dup).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", hvec * jax.nn.silu(g), p["w_down"])
+    new_cache = {
+        "c": c_new,
+        "n": n_new,
+        "m": m_new,
+        "conv": conv_in[:, 1:, :].astype(jnp.bfloat16),
+    }
+    return shard(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return {
+        "w_in": LeafSpec((d, 4 * d), (None, "ff")),  # i,f,z,o stacked
+        "b_in": LeafSpec((4 * d,), ("ff",), "zeros"),
+        "r": LeafSpec((4, h, hd, hd), (None, None, None, None), scale=0.01),
+        "out_proj": LeafSpec((d, d), (None, None)),
+    }
+
+
+def _slstm_cell(carry, gates, r):
+    """carry: (c, n, m, h) each (B,H,hd); gates: (B,4,H,hd) pre-activation
+    from the input projection; r: (4,H,hd,hd) recurrent weights."""
+    c, n, m, h = carry
+    rec = jnp.einsum("bhe,ghek->bghk", h, r)  # (B,4,H,hd)
+    gi, gf, gz, go = [gates[:, j] + rec[:, j] for j in range(4)]
+    gi = gi.astype(jnp.float32)
+    gf = gf.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(lf + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz.astype(jnp.float32))
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go.astype(jnp.float32)) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    gates = (jnp.einsum("bsd,dg->bsg", x, p["w_in"]) + p["b_in"]).reshape(
+        b, s, 4, h, hd
+    )
+
+    def step(carry, g_t):
+        return _slstm_cell(carry, g_t, p["r"])
+
+    carry0 = tuple(jnp.zeros((b, h, hd), jnp.float32) for _ in range(3)) + (
+        jnp.zeros((b, h, hd), jnp.float32),
+    )
+    carry0 = (carry0[0], carry0[1], jnp.full((b, h, hd), -1e30, jnp.float32), carry0[3])
+    _, hs = jax.lax.scan(step, carry0, gates.transpose(1, 0, 2, 3, 4))
+    hseq = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", hseq, p["out_proj"])
+    return shard(out, "batch", None, None)
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h, hd), -1e30, jnp.float32), "h": z}
+
+
+def slstm_cache_logical() -> dict:
+    return {k: ("batch", None, None) for k in ("c", "n", "m", "h")}
+
+
+def slstm_decode_step(
+    p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    gates = (jnp.einsum("bsd,dg->bsg", x, p["w_in"]) + p["b_in"]).reshape(
+        b, 4, h, hd
+    )
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    (c, n, m, hh), h_new = _slstm_cell(carry, gates, p["r"])
+    out = jnp.einsum("bsd,de->bse", h_new.reshape(b, 1, cfg.d_model).astype(x.dtype), p["out_proj"])
+    return shard(out, "batch", None, None), {"c": c, "n": n, "m": m, "h": hh}

@@ -1,0 +1,5 @@
+"""Optimizers (pure JAX, pytree- and flat-vector-based)."""
+
+from .sgd import sgd_momentum_init, sgd_momentum_step, local_prox_train
+
+__all__ = ["sgd_momentum_init", "sgd_momentum_step", "local_prox_train"]

@@ -1,0 +1,72 @@
+"""SGD + momentum and the prox-regularized local solver (paper Eq. 4).
+
+Clients minimize ``h_m(w; w_g) = f_m(w) + (lam/2) ||w - w_g||^2`` with
+momentum SGD (paper: momentum 0.5, lr 0.01, 5 local epochs, batch 10).
+``local_prox_train`` works on *flat* parameter vectors so the result feeds
+straight into the PRoBit+ quantizer; the fused Pallas ``prox_sgd`` kernel
+is used when requested (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+
+def sgd_momentum_init(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd_momentum_step(params, moms, grads, lr: float, mu: float):
+    new_moms = jax.tree.map(lambda m, g: mu * m + g, moms, grads)
+    new_params = jax.tree.map(lambda p, m: p - lr * m, params, new_moms)
+    return new_params, new_moms
+
+
+def local_prox_train(
+    loss_fn: Callable,
+    w0_flat: jax.Array,
+    w_init_flat: jax.Array,
+    unravel: Callable,
+    batches: dict,
+    *,
+    lr: float,
+    mu: float,
+    lam: float,
+    use_kernel: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Run local steps over pre-batched data.
+
+    batches: pytree with leading (n_steps, batch, ...) dims.
+    Returns (w_final_flat, loss_first, loss_last) — the two losses feed the
+    dynamic-b controller's one-bit training signal.
+    """
+
+    def data_loss(w_flat, batch):
+        return loss_fn(unravel(w_flat), batch)
+
+    grad_fn = jax.grad(data_loss)
+
+    def step(carry, batch):
+        w, m = carry
+        g = grad_fn(w, batch)
+        if use_kernel:
+            w, m = kops.prox_sgd(w, w0_flat, g, m, lr, lam, mu)
+        else:
+            g = g + lam * (w - w0_flat)
+            m = mu * m + g
+            w = w - lr * m
+        return (w, m), None
+
+    n_steps = jax.tree.leaves(batches)[0].shape[0]
+    first = jax.tree.map(lambda a: a[0], batches)
+    last = jax.tree.map(lambda a: a[-1], batches)
+    loss_before = data_loss(w_init_flat, first)
+    (w, _), _ = jax.lax.scan(step, (w_init_flat, jnp.zeros_like(w_init_flat)), batches)
+    loss_after = data_loss(w, last)
+    return w, loss_before, loss_after

@@ -1,0 +1,5 @@
+"""Batched serving of the aggregated global model."""
+
+from .engine import ServeConfig, ServingEngine
+
+__all__ = ["ServeConfig", "ServingEngine"]

@@ -1,0 +1,103 @@
+"""Batched decode engine over the model zoo's ``serve_step``.
+
+Serves the FL-aggregated global model: fixed-batch continuous decoding
+with per-slot request state (prompt feeding → generation → done), greedy
+or temperature sampling. One jit-compiled step serves the whole batch;
+finished slots are refilled from the queue between steps — the standard
+static-batch serving loop, deployable under the production mesh
+(``jax.set_mesh``) with the same sharding rules as the dry-run.
+
+Prompt feeding reuses the decode path (one token at a time) so the engine
+works identically for attention KV caches, ring-buffer windows, and
+SSM/xLSTM recurrent state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import init_cache, serve_step
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 8
+    max_len: int = 256  # cache length
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    window: int = 0  # >0: ring-buffer sliding window
+    eos_token: int = -1  # -1: disabled
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig):
+        assert not cfg.encoder_only, "encoder-only models have no decode path"
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.cache = init_cache(cfg, serve.batch_size, serve.max_len)
+
+        def step(params, cache, tokens, pos, key):
+            logits, cache = serve_step(
+                params, cache, {"tokens": tokens}, pos, cfg, serve.window
+            )
+            if serve.temperature > 0:
+                nxt = jax.random.categorical(key, logits / serve.temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            return nxt.astype(jnp.int32), cache
+
+        self._step = jax.jit(step)
+
+    def generate(
+        self, prompts: Iterable[list[int]], seed: int = 0
+    ) -> list[list[int]]:
+        """Decode a list of prompts (static batch; queue-refill between
+        generations). Returns generated token lists (prompt excluded)."""
+        prompts = [list(p) for p in prompts]
+        s = self.serve
+        results: list[list[int]] = [[] for _ in prompts]
+        key = jax.random.PRNGKey(seed)
+        queue = list(range(len(prompts)))
+
+        while queue:
+            wave = queue[: s.batch_size]
+            queue = queue[s.batch_size :]
+            # left-align this wave into the batch
+            self.cache = init_cache(self.cfg, s.batch_size, s.max_len)
+            maxp = max(len(prompts[i]) for i in wave)
+            gen_mask = np.zeros(s.batch_size, bool)
+            gen_mask[: len(wave)] = True
+            done = ~gen_mask
+            cur = np.zeros((s.batch_size, 1), np.int32)
+            for t in range(maxp + s.max_new_tokens - 1):
+                for bi, ri in enumerate(wave):
+                    p = prompts[ri]
+                    if t < len(p):
+                        cur[bi, 0] = p[t]
+                key, ks = jax.random.split(key)
+                nxt, self.cache = self._step(
+                    self.params, self.cache, jnp.asarray(cur), jnp.int32(t), ks
+                )
+                nxt = np.asarray(nxt)
+                for bi, ri in enumerate(wave):
+                    p = prompts[ri]
+                    if t >= len(p) - 1 and not done[bi]:
+                        tok = int(nxt[bi])
+                        results[ri].append(tok)
+                        if (
+                            tok == s.eos_token
+                            or len(results[ri]) >= s.max_new_tokens
+                        ):
+                            done[bi] = True
+                        else:
+                            cur[bi, 0] = tok
+                if done[: len(wave)].all():
+                    break
+        return results

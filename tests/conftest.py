@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Smoke tests and benches must see the REAL device count (1 CPU device) —
+# the 512-device XLA flag is set ONLY inside repro.launch.dryrun.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

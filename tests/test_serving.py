@@ -1,0 +1,147 @@
+"""Serving engine + sparse PRoBit+ + DP-composition tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.privacy import advanced_composition, basic_composition, rounds_for_budget
+from repro.core.sparse import sparse_aggregate, topk_binarize
+from repro.models import build_specs
+from repro.models.spec import init_params
+from repro.serving import ServeConfig, ServingEngine
+
+
+class TestServingEngine:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        cfg = configs.reduced(configs.get_config("qwen2-1.5b"))
+        params = init_params(build_specs(cfg), jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_batched_generation(self, engine):
+        cfg, params = engine
+        eng = ServingEngine(cfg, params, ServeConfig(batch_size=2, max_len=32, max_new_tokens=5))
+        prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9]]  # 3 requests > batch 2
+        out = eng.generate(prompts)
+        assert len(out) == 3
+        assert all(len(o) == 5 for o in out)
+        assert all(0 <= t < cfg.vocab for o in out for t in o)
+
+    def test_greedy_matches_prefill_argmax(self, engine):
+        """First generated token == argmax of prefill logits at the last
+        prompt position (the engine's decode path is consistent)."""
+        from repro.models import prefill
+
+        cfg, params = engine
+        eng = ServingEngine(cfg, params, ServeConfig(batch_size=1, max_len=32, max_new_tokens=1))
+        prompt = [3, 1, 4, 1, 5]
+        out = eng.generate([prompt])
+        logits = prefill(params, {"tokens": jnp.asarray([prompt])}, cfg)
+        want = int(jnp.argmax(logits[0, -1]))
+        assert out[0][0] == want
+
+    def test_sampled_generation_runs(self, engine):
+        cfg, params = engine
+        eng = ServingEngine(
+            cfg, params,
+            ServeConfig(batch_size=2, max_len=32, max_new_tokens=4, temperature=0.8),
+        )
+        out = eng.generate([[1, 2], [3]])
+        assert all(len(o) == 4 for o in out)
+
+    def test_ssm_family_serves(self):
+        cfg = configs.reduced(configs.get_config("xlstm-350m"))
+        params = init_params(build_specs(cfg), jax.random.PRNGKey(1))
+        eng = ServingEngine(cfg, params, ServeConfig(batch_size=2, max_len=16, max_new_tokens=3))
+        out = eng.generate([[1, 2, 3]])
+        assert len(out[0]) == 3
+
+
+class TestSparseProbit:
+    def test_dense_limit_matches_eq13(self):
+        """k = d reduces to the dense ML estimate."""
+        key = jax.random.PRNGKey(0)
+        d, m = 64, 12
+        delta = 0.01 * jax.random.normal(key, (m, d))
+        b = jnp.full((d,), 0.05)
+        keys = jax.random.split(key, m)
+        idx, codes = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
+            keys, delta, b, d
+        )
+        theta = sparse_aggregate(idx, codes, b, d)
+        # compare against dense path with identical per-client randomness is
+        # not possible (different draw order) — check unbiasedness instead
+        reps = 400
+        kk = jax.random.split(jax.random.fold_in(key, 1), reps)
+
+        def est(k2):
+            ks = jax.random.split(k2, m)
+            i2, c2 = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
+                ks, delta, b, d
+            )
+            return sparse_aggregate(i2, c2, b, d)
+
+        mean_est = jnp.mean(jax.vmap(est)(kk), axis=0)
+        target = jnp.mean(delta, axis=0)
+        se = 0.05 / np.sqrt(m * reps)
+        assert float(jnp.max(jnp.abs(mean_est - target))) < 6 * se
+
+    def test_sparse_only_touches_reported_coords(self):
+        d, m, k = 32, 4, 4
+        key = jax.random.PRNGKey(2)
+        delta = jnp.zeros((m, d)).at[:, :k].set(1.0)  # top-k is coords 0..k-1
+        b = jnp.full((d,), 2.0)
+        keys = jax.random.split(key, m)
+        idx, codes = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
+            keys, delta, b, k
+        )
+        theta = sparse_aggregate(idx, codes, b, d)
+        assert bool(jnp.all(theta[k:] == 0.0))
+
+    def test_topk_with_dp_is_refused(self):
+        from repro.fl import FLConfig
+
+        with pytest.raises(ValueError):
+            FLConfig(topk_frac=0.1, dp_epsilon=0.1)
+
+    def test_sparse_fl_learns(self):
+        import functools
+
+        from repro.data import make_classification, partition_label_skew
+        from repro.fl import FLConfig, FLSimulation
+        from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
+
+        (xtr, ytr), (xte, yte) = make_classification(0, n_train=2000, n_test=400)
+        parts = partition_label_skew(ytr, 8, 2, 80, seed=1)
+        cx = np.stack([xtr[i] for i in parts])
+        cy = np.stack([ytr[i] for i in parts])
+        p0 = init_mlp(jax.random.PRNGKey(0), hidden=32)
+        cfg = FLConfig(
+            n_clients=8, aggregator="probit_plus", topk_frac=0.25,
+            rounds=40, local_epochs=2,
+        )
+        sim = FLSimulation(
+            cfg, p0,
+            functools.partial(xent_loss, mlp_logits),
+            functools.partial(accuracy, mlp_logits),
+            cx, cy, {"x": xte, "y": yte},
+        )
+        sim.run(eval_every=40)
+        assert sim.history[-1]["acc"] > 0.15  # learning with 4x fewer coords
+
+
+class TestDPComposition:
+    def test_advanced_beats_basic_for_many_rounds(self):
+        eps = 0.1
+        t = 300  # the paper's round count
+        basic = basic_composition(eps, t)
+        adv, delta = advanced_composition(eps, t, 1e-5)
+        assert adv < basic
+        assert delta == 1e-5
+
+    def test_rounds_for_budget_monotone(self):
+        r1 = rounds_for_budget(5.0, 0.1)
+        r2 = rounds_for_budget(10.0, 0.1)
+        assert r2 > r1 > 0
