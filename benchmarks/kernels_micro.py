@@ -1,6 +1,7 @@
-"""Kernel microbenchmarks: us/call of the Pallas paths (interpret mode on
-this CPU container — wall numbers are for CI tracking, not TPU projection)
-plus the analytic communication-compression ratios the kernels realize."""
+"""Kernel + pipeline microbenchmarks: us/call of the Pallas paths
+(interpret mode on this CPU container — wall numbers are for CI tracking,
+not TPU projection) plus the measured wire/memory traffic of the packed
+aggregation pipeline vs the dense reference path."""
 
 from __future__ import annotations
 
@@ -11,7 +12,58 @@ from .common import emit, timed
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core import build_pipeline, padded_dim, probit_plus_from_updates  # noqa: E402
 from repro.kernels import ops  # noqa: E402
+
+
+def pipeline_traffic(n: int = 262_144, m: int = 16) -> dict:
+    """End-to-end AggregatorPipeline: packed wire vs dense f32 codes.
+
+    Reports the bytes each path moves for one aggregation round:
+      * dense reference: (M, n) f32 code matrix read by the server
+        -> 4 * M * n bytes (what the pre-pipeline runtime materialized);
+      * dense int8 codes: M * n bytes (sign bytes, signSGD-style);
+      * packed wire: (M, P) uint8, P = ceil(n/8 per alignment) -> ~M * n/8
+        bytes — 8x below int8 codes, 32x below f32 codes.
+    """
+    key = jax.random.PRNGKey(0)
+    deltas = 0.01 * jax.random.normal(key, (m, n))
+    res = jnp.zeros((m, n), jnp.float32)
+    b = jnp.float32(0.05)
+    out: dict = {}
+
+    dense_f32_bytes = 4 * m * n
+    dense_i8_bytes = m * n
+
+    for label, pipe, pad in [
+        ("jax_packed", build_pipeline("probit_plus"), padded_dim(n)),
+        ("kernel_packed", build_pipeline("probit_plus", use_kernels=True),
+         ops.padded_len(n)),
+    ]:
+        run = jax.jit(lambda k, d, bb, r, p=pipe: p(k, d, bb, r)[0])
+        us = timed(lambda: run(key, deltas, b, res), reps=10)
+        wire_bytes = m * pad // 8  # (M, d_pad/8) uint8 — static, no re-run
+        out[f"pipeline_{label}_us"] = us
+        out[f"pipeline_{label}_wire_bytes"] = wire_bytes
+        emit(
+            f"pipeline_{label}",
+            us,
+            f"M={m};n={n};wire_bytes={wire_bytes}"
+            f";vs_int8_codes={dense_i8_bytes / wire_bytes:.1f}x"
+            f";vs_f32_codes={dense_f32_bytes / wire_bytes:.1f}x",
+        )
+
+    # dense reference path (f32 codes materialized, pre-pipeline behavior)
+    bvec = jnp.full((n,), 0.05)
+    dense = jax.jit(lambda k, d: probit_plus_from_updates(k, d, bvec))
+    us = timed(lambda: dense(key, deltas), reps=10)
+    out["pipeline_dense_reference_us"] = us
+    emit(
+        "pipeline_dense_reference",
+        us,
+        f"M={m};n={n};codes_bytes_f32={dense_f32_bytes}",
+    )
+    return out
 
 
 def main(n: int = 262_144, m: int = 16) -> dict:
@@ -39,6 +91,8 @@ def main(n: int = 262_144, m: int = 16) -> dict:
     us = timed(lambda: ops.prox_sgd(w, w * 0.9, g, mom, 0.01, 0.2, 0.5), reps=10)
     out["prox_sgd"] = us
     emit("kernel_prox_sgd", us, "fused_passes=1_vs_4")
+
+    out.update(pipeline_traffic(n, m))
     return out
 
 

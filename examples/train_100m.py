@@ -23,6 +23,7 @@ from repro import configs
 from repro.checkpoint import save_checkpoint
 from repro.data import make_lm_streams
 from repro.launch.fl_step import DistFLConfig, make_fl_train_step
+from repro.distributed import set_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_specs
 from repro.models.config import ModelConfig
@@ -56,7 +57,7 @@ def main():
     rounds = args.rounds or (300 if args.full else 30)
 
     cfg = model_config(args.full)
-    with jax.set_mesh(make_host_mesh()):
+    with set_mesh(make_host_mesh()):
         specs = build_specs(cfg)
         params = init_params(specs, jax.random.PRNGKey(0))
         print(f"{cfg.name}: {count_params(specs)/1e6:.1f}M params, {rounds} rounds")

@@ -1,25 +1,73 @@
-"""Server-side aggregators: PRoBit+ (paper Eq. 13) and the paper's baselines.
+"""Aggregation pipeline: client compressors, server aggregators, registry.
 
-Every aggregator shares the signature::
+Architecture — the packed-wire contract
+=======================================
 
-    theta_hat = aggregate(updates, **kw)          # updates: (M, d) float
-or, for bit-based schemes::
+Every aggregation path in this repo (CPU simulation in ``fl/runtime.py``,
+the Pallas kernels in ``kernels/``, the sharded mesh step in
+``launch/fl_step.py``, and the microbenchmarks) speaks one protocol,
+split into two halves joined by an explicit wire format:
 
-    theta_hat = aggregate_codes(codes, b, **kw)   # codes: (M, d) int8 ±1
+``ClientCompressor``
+    error feedback -> top-k selection -> stochastic binarize (Eq. 5) ->
+    uint8 bit-pack. Emits one of three wire formats:
 
-``d`` is the flattened model dimension (callers ravel the param pytree with
-``jax.flatten_util.ravel_pytree``). All run under ``jax.jit``.
+    * :class:`PackedWire` — the **canonical** format: an ``(M, d_pad/8)``
+      uint8 matrix of LSB-first packed one-bit codes plus the public
+      range vector ``b`` (d,). This is 1 bit/parameter on the wire — the
+      paper's 32x upload saving vs f32, realized in memory traffic too
+      because both producer and consumer work in d-chunks
+      (:func:`repro.core.quantizer.packed_binarize_batch` /
+      :func:`repro.core.quantizer.packed_counts`) and the dense (M, d)
+      code tensor never materializes.
+    * :class:`SparseWire` — top-k variant: per-client index sets plus
+      packed codes (beyond-paper extension, see ``core/sparse.py``).
+    * :class:`DenseWire` — full-precision passthrough for the FedAvg /
+      Fed-GM baselines.
+
+``ServerAggregator``
+    unpack / vote-count -> estimate. For bit-based schemes the shared hot
+    path is the chunked vote count ``N_i``; the per-scheme estimate is a
+    pure function of ``(counts, M, b)``:
+
+    * PRoBit+  : ``(2 N_i - M)/M * b_i``            (ML estimate, Eq. 13)
+    * signSGD-MV: ``step * sign(2 N_i - M)``        [Bernstein et al. 2019]
+    * RSA      : ``step * (2 N_i - M)``             [Li et al. 2019]
+
+    FedAvg / Fed-GM consume :class:`DenseWire` directly.
+
+An :class:`AggregatorPipeline` bundles one compressor with one server
+aggregator; :func:`build_pipeline` resolves a registered name
+("probit_plus" | "fedavg" | "fed_gm" | "signsgd_mv" | "rsa") into a
+configured pipeline. ``use_kernels=True`` swaps PRoBit+'s two halves for
+the fused Pallas kernels (``kernels/stoch_quant.py`` client-side,
+``kernels/bit_aggregate.py`` server-side; interpret mode on CPU) — same
+wire, same estimate, different engine.
+
+The standalone functions below (``probit_plus_aggregate`` etc.) remain
+the mathematical reference implementations the pipelines and tests are
+validated against.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Callable
+import dataclasses
+from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp
 
-from .quantizer import codes_to_counts, stochastic_binarize
+from .privacy import DPConfig
+from .quantizer import (
+    PACK_CHUNK,
+    codes_to_counts,
+    packed_binarize_batch,
+    packed_counts,
+    packed_residuals,
+    packed_sign_batch,
+    stochastic_binarize,
+    binarize_prob,
+)
 
 __all__ = [
     "ml_estimate_from_counts",
@@ -29,13 +77,19 @@ __all__ = [
     "geometric_median",
     "signsgd_mv_aggregate",
     "rsa_aggregate",
-    "get_bit_aggregator",
-    "get_full_precision_aggregator",
+    "PackedWire",
+    "SparseWire",
+    "DenseWire",
+    "ClientCompressor",
+    "ServerAggregator",
+    "AggregatorPipeline",
+    "build_pipeline",
+    "available_aggregators",
 ]
 
 
 # ---------------------------------------------------------------------------
-# PRoBit+
+# PRoBit+ reference math
 # ---------------------------------------------------------------------------
 
 def ml_estimate_from_counts(counts: jax.Array, m: int, b: jax.Array) -> jax.Array:
@@ -111,24 +165,379 @@ def rsa_aggregate(codes: jax.Array, step: float = 0.01) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Registries
+# Wire formats
 # ---------------------------------------------------------------------------
 
-_BIT_AGGREGATORS: dict[str, Callable] = {
-    "probit_plus": probit_plus_aggregate,
-    "signsgd_mv": lambda codes, b, step=0.01: signsgd_mv_aggregate(codes, step),
-    "rsa": lambda codes, b, step=0.01: rsa_aggregate(codes, step),
-}
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedWire:
+    """Canonical one-bit wire: (M, d_pad/8) uint8 packed codes + range b."""
 
-_FP_AGGREGATORS: dict[str, Callable] = {
-    "fedavg": fedavg_aggregate,
-    "fed_gm": geometric_median,
-}
+    packed: jax.Array  # (M, P) uint8, P * 8 >= d
+    b: jax.Array  # (d,) f32 public quantization range
+    d: int = dataclasses.field(metadata=dict(static=True))  # true dimension
+
+    @property
+    def n_clients(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.packed.shape[0] * self.packed.shape[1]
 
 
-def get_bit_aggregator(name: str) -> Callable:
-    return _BIT_AGGREGATORS[name]
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseWire:
+    """Top-k wire: per-client indices (M, k) + packed codes (M, ceil(k/8))."""
+
+    indices: jax.Array  # (M, k) int32
+    packed: jax.Array  # (M, ceil(k/8)) uint8
+    b: jax.Array  # (d,) f32
+    d: int = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(metadata=dict(static=True))
 
 
-def get_full_precision_aggregator(name: str) -> Callable:
-    return _FP_AGGREGATORS[name]
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseWire:
+    """Full-precision passthrough (FedAvg / Fed-GM baselines)."""
+
+    updates: jax.Array  # (M, d) f32
+
+
+Wire = Union[PackedWire, SparseWire, DenseWire]
+
+
+# ---------------------------------------------------------------------------
+# Client compressor
+# ---------------------------------------------------------------------------
+
+def _unpack_rows(packed: jax.Array, n: int) -> jax.Array:
+    """(M, P) uint8 -> (M, n) ±1 int8 (test/sparse helper, materializes)."""
+    from .quantizer import unpack_bits
+
+    return jax.vmap(lambda p: unpack_bits(p, n))(packed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientCompressor:
+    """Client half of the pipeline: EF -> top-k -> binarize -> bit-pack.
+
+    ``mode``:
+      * "pack_stochastic" — PRoBit+ Eq. 5 compressor, packed wire;
+      * "pack_sign"       — deterministic sign codes (signSGD-MV / RSA);
+      * "dense"           — identity (full-precision baselines).
+    """
+
+    mode: str = "pack_stochastic"
+    error_feedback: bool = False
+    topk_frac: float = 1.0
+    dp: DPConfig = DPConfig(0.0)
+    b_mode: str = "dynamic"
+    use_kernels: bool = False
+    chunk: int = PACK_CHUNK
+
+    # The Eq.-5 bit probability — shared with the mesh path (fl_step).
+    bit_probability = staticmethod(binarize_prob)
+
+    def _b_vector(self, eff: jax.Array, b_scalar: jax.Array) -> jax.Array:
+        d = eff.shape[1]
+        if self.b_mode == "oracle":
+            from .bcontrol import oracle_b
+
+            return oracle_b(eff, self.dp)
+        b_eff = b_scalar
+        if self.dp.enabled:
+            b_eff = b_eff + (1.0 + 1.0 / self.dp.epsilon) * self.dp.l1_sensitivity
+        return jnp.full((d,), b_eff, jnp.float32)
+
+    def compress(
+        self,
+        key: jax.Array,
+        deltas: jax.Array,
+        b_scalar: jax.Array,
+        residuals: jax.Array,
+    ) -> tuple[Wire, jax.Array]:
+        """(M, d) updates -> (wire, residuals'). Residuals pass through
+        unchanged unless error feedback is active (PRoBit+, no DP)."""
+        if self.mode == "dense":
+            return DenseWire(updates=deltas), residuals
+        if self.mode == "pack_sign":
+            d = deltas.shape[1]
+            wire = PackedWire(
+                packed=packed_sign_batch(deltas, chunk=self.chunk),
+                b=jnp.ones((d,), jnp.float32),
+                d=d,
+            )
+            return wire, residuals
+
+        # PRoBit+ (pack_stochastic)
+        m, d = deltas.shape
+        use_ef = self.error_feedback and not self.dp.enabled
+        eff = deltas + residuals if use_ef else deltas
+        b_vec = self._b_vector(eff, b_scalar)
+
+        if self.topk_frac < 1.0:
+            from .sparse import topk_binarize
+            from .quantizer import pack_bits
+
+            k = max(int(d * self.topk_frac), 1)
+            keys = jax.random.split(key, m)
+            idx, codes = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
+                keys, eff, b_vec, k
+            )
+            if use_ef:
+                rows = jnp.arange(m)[:, None]
+                sent = jnp.zeros_like(eff).at[rows, idx].set(
+                    codes.astype(jnp.float32)
+                )
+                # unreported coordinates carry their full delta forward
+                residuals = eff - sent * b_vec
+            wire = SparseWire(
+                indices=idx,
+                packed=jax.vmap(pack_bits)(codes),
+                b=b_vec,
+                d=d,
+                k=k,
+            )
+            return wire, residuals
+
+        if self.use_kernels:
+            from ..kernels import ops as kops
+
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(m))
+            packed = jax.vmap(lambda ck, row: kops.stoch_quant_pack(ck, row, b_vec))(
+                keys, eff
+            )
+            if use_ef:
+                residuals = packed_residuals(packed, eff, b_vec, chunk=self.chunk)
+            return PackedWire(packed=packed, b=b_vec, d=d), residuals
+
+        packed, res = packed_binarize_batch(
+            key, eff, b_vec, chunk=self.chunk, want_residual=use_ef
+        )
+        if use_ef:
+            residuals = res
+        return PackedWire(packed=packed, b=b_vec, d=d), residuals
+
+
+# ---------------------------------------------------------------------------
+# Server aggregators
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServerAggregator:
+    """Server half: unpack/vote-count -> estimate.
+
+    Bit-based schemes override :meth:`from_counts`; dense schemes override
+    :meth:`from_dense`. :meth:`aggregate` dispatches on the wire type.
+    """
+
+    chunk: int = PACK_CHUNK
+
+    def from_counts(self, counts: jax.Array, m: int, b: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def from_dense(self, updates: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def aggregate(self, wire: Wire) -> jax.Array:
+        if isinstance(wire, DenseWire):
+            return self.from_dense(wire.updates)
+        if isinstance(wire, SparseWire):
+            raise TypeError(f"{type(self).__name__} cannot consume SparseWire")
+        counts = packed_counts(wire.packed, chunk=self.chunk)[: wire.d]
+        return self.from_counts(counts, wire.n_clients, wire.b)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProBitPlusServer(ServerAggregator):
+    """Eq. 13 ML estimate; optionally via the fused Pallas count kernel."""
+
+    use_kernels: bool = False
+
+    def from_counts(self, counts, m, b):
+        return ml_estimate_from_counts(counts, m, b)
+
+    def aggregate(self, wire: Wire) -> jax.Array:
+        if isinstance(wire, SparseWire):
+            from .sparse import sparse_aggregate
+
+            codes = _unpack_rows(wire.packed, wire.k)
+            return sparse_aggregate(wire.indices, codes, wire.b, wire.d)
+        if self.use_kernels and isinstance(wire, PackedWire):
+            from ..kernels import ops as kops
+
+            # The kernel expects 1024-lane (128-byte) alignment; a wire from
+            # the chunked pure-JAX compressor may carry more (or fewer) pad
+            # bytes. Pad bits encode coordinates >= d, which bit_aggregate
+            # slices off, so realigning is lossless.
+            pbytes = kops.padded_len(wire.d) // 8
+            packed = wire.packed
+            if packed.shape[1] > pbytes:
+                packed = packed[:, :pbytes]
+            elif packed.shape[1] < pbytes:
+                packed = jnp.pad(
+                    packed, ((0, 0), (0, pbytes - packed.shape[1]))
+                )
+            return kops.bit_aggregate(packed, wire.b, wire.d)
+        return super().aggregate(wire)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignSGDMVServer(ServerAggregator):
+    step: float = 0.01
+
+    def from_counts(self, counts, m, b):
+        return self.step * jnp.sign(2.0 * counts.astype(jnp.float32) - m)
+
+
+@dataclasses.dataclass(frozen=True)
+class RSAServer(ServerAggregator):
+    step: float = 0.01
+
+    def from_counts(self, counts, m, b):
+        return self.step * (2.0 * counts.astype(jnp.float32) - m)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgServer(ServerAggregator):
+    def from_dense(self, updates):
+        return fedavg_aggregate(updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedGMServer(ServerAggregator):
+    iters: int = 16
+
+    def from_dense(self, updates):
+        return geometric_median(updates, self.iters)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorPipeline:
+    """One named aggregation scheme: compressor + server, jit-composable."""
+
+    name: str
+    compressor: ClientCompressor
+    server: ServerAggregator
+
+    def __call__(
+        self,
+        key: jax.Array,
+        deltas: jax.Array,
+        b_scalar: jax.Array,
+        residuals: jax.Array,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Full round: compress all clients, aggregate, return (theta, res')."""
+        wire, residuals = self.compressor.compress(key, deltas, b_scalar, residuals)
+        return self.server.aggregate(wire), residuals
+
+
+_PIPELINES: dict[str, Callable[..., AggregatorPipeline]] = {}
+
+
+def _register(name: str):
+    def deco(builder: Callable[..., AggregatorPipeline]):
+        _PIPELINES[name] = builder
+        return builder
+
+    return deco
+
+
+def available_aggregators() -> tuple[str, ...]:
+    return tuple(sorted(_PIPELINES))
+
+
+def build_pipeline(
+    name: str,
+    *,
+    dp: DPConfig = DPConfig(0.0),
+    b_mode: str = "dynamic",
+    error_feedback: bool = False,
+    topk_frac: float = 1.0,
+    agg_step: float = 0.01,
+    gm_iters: int = 16,
+    use_kernels: bool = False,
+    chunk: int = PACK_CHUNK,
+) -> AggregatorPipeline:
+    """Resolve a registered aggregator name into a configured pipeline."""
+    try:
+        builder = _PIPELINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {name!r}; available: {available_aggregators()}"
+        ) from None
+    return builder(
+        dp=dp,
+        b_mode=b_mode,
+        error_feedback=error_feedback,
+        topk_frac=topk_frac,
+        agg_step=agg_step,
+        gm_iters=gm_iters,
+        use_kernels=use_kernels,
+        chunk=chunk,
+    )
+
+
+@_register("probit_plus")
+def _build_probit_plus(
+    *, dp, b_mode, error_feedback, topk_frac, agg_step, gm_iters, use_kernels, chunk
+):
+    # The Pallas kernels handle the dense packed wire only; top-k keeps the
+    # pure-JAX sparse path (prox-SGD training kernels are unaffected).
+    kernel_wire = use_kernels and topk_frac >= 1.0
+    return AggregatorPipeline(
+        name="probit_plus",
+        compressor=ClientCompressor(
+            mode="pack_stochastic",
+            error_feedback=error_feedback,
+            topk_frac=topk_frac,
+            dp=dp,
+            b_mode=b_mode,
+            use_kernels=kernel_wire,
+            chunk=chunk,
+        ),
+        server=ProBitPlusServer(use_kernels=kernel_wire, chunk=chunk),
+    )
+
+
+@_register("fedavg")
+def _build_fedavg(*, gm_iters, chunk, **_):
+    return AggregatorPipeline(
+        name="fedavg",
+        compressor=ClientCompressor(mode="dense", chunk=chunk),
+        server=FedAvgServer(chunk=chunk),
+    )
+
+
+@_register("fed_gm")
+def _build_fed_gm(*, gm_iters, chunk, **_):
+    return AggregatorPipeline(
+        name="fed_gm",
+        compressor=ClientCompressor(mode="dense", chunk=chunk),
+        server=FedGMServer(iters=gm_iters, chunk=chunk),
+    )
+
+
+@_register("signsgd_mv")
+def _build_signsgd_mv(*, agg_step, chunk, **_):
+    return AggregatorPipeline(
+        name="signsgd_mv",
+        compressor=ClientCompressor(mode="pack_sign", chunk=chunk),
+        server=SignSGDMVServer(step=agg_step, chunk=chunk),
+    )
+
+
+@_register("rsa")
+def _build_rsa(*, agg_step, chunk, **_):
+    return AggregatorPipeline(
+        name="rsa",
+        compressor=ClientCompressor(mode="pack_sign", chunk=chunk),
+        server=RSAServer(step=agg_step, chunk=chunk),
+    )

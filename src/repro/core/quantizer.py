@@ -25,6 +25,12 @@ __all__ = [
     "pack_bits",
     "unpack_bits",
     "codes_to_counts",
+    "PACK_CHUNK",
+    "padded_dim",
+    "packed_binarize_batch",
+    "packed_sign_batch",
+    "packed_counts",
+    "packed_residuals",
 ]
 
 
@@ -76,3 +82,148 @@ def unpack_bits(packed: jax.Array, n: int) -> jax.Array:
 def codes_to_counts(codes: jax.Array) -> jax.Array:
     """``N_i`` of Eq. 12: number of +1 codes across the leading client axis."""
     return jnp.sum((codes > 0).astype(jnp.int32), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Packed wire format: chunked batch quantize / count
+#
+# The canonical on-the-wire representation of a round is the (M, d_pad/8)
+# uint8 matrix of packed one-bit codes. The helpers below produce and
+# consume it in d-chunks so the dense (M, d) codes tensor never
+# materializes — peak extra memory is O(M * PACK_CHUNK) regardless of d.
+# ---------------------------------------------------------------------------
+
+PACK_CHUNK = 8192  # coordinates per chunked-reduction step (multiple of 8)
+
+
+def padded_dim(d: int, chunk: int = PACK_CHUNK) -> int:
+    """Wire dimension: ``d`` rounded up to a whole number of chunks."""
+    return ((d + chunk - 1) // chunk) * chunk
+
+
+def _pack_bool_lastdim(bits: jax.Array) -> jax.Array:
+    """(..., 8k) bool -> (..., k) uint8, LSB-first within each byte."""
+    shape = bits.shape[:-1] + (bits.shape[-1] // 8, 8)
+    b8 = bits.astype(jnp.uint8).reshape(shape)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(b8 << shifts, axis=-1).astype(jnp.uint8)
+
+
+def _pad_batch(deltas: jax.Array, b: jax.Array, chunk: int):
+    """Pad (M, d) deltas / (d,) b to a whole number of chunks.
+
+    Pad coordinates get delta = -1, b = 1 so their bit is deterministically
+    0 (p = 0) — the wire is reproducible and pad bits carry no entropy.
+    """
+    m, d = deltas.shape
+    d_pad = padded_dim(d, chunk)
+    deltas = jnp.pad(
+        deltas.astype(jnp.float32), ((0, 0), (0, d_pad - d)), constant_values=-1.0
+    )
+    b_full = jnp.pad(
+        jnp.broadcast_to(b, (d,)).astype(jnp.float32),
+        (0, d_pad - d),
+        constant_values=1.0,
+    )
+    return deltas, b_full, d_pad
+
+
+def packed_binarize_batch(
+    key: jax.Array,
+    deltas: jax.Array,
+    b: jax.Array,
+    *,
+    chunk: int = PACK_CHUNK,
+    want_residual: bool = False,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Chunked Eq. 5 binarize + pack: (M, d) f32 -> (M, d_pad/8) uint8.
+
+    Randomness schedule: coordinate chunk ``j`` of client ``m`` draws its
+    uniforms from ``fold_in(fold_in(key, m), j)``, so the wire is exactly
+    reproducible chunk-by-chunk without an (M, d) uniform or code tensor.
+
+    With ``want_residual`` the error-feedback residual
+    ``delta - c * b`` (codes in ±1) is emitted alongside, computed inside
+    the same chunk loop.
+    """
+    m, d = deltas.shape
+    deltas_p, b_full, d_pad = _pad_batch(deltas, b, chunk)
+    n_chunks = d_pad // chunk
+    client_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(m))
+
+    def one_chunk(j):
+        dch = jax.lax.dynamic_slice_in_dim(deltas_p, j * chunk, chunk, axis=1)
+        bch = jax.lax.dynamic_slice_in_dim(b_full, j * chunk, chunk, axis=0)
+
+        def per_client(ck, drow):
+            u = jax.random.uniform(
+                jax.random.fold_in(ck, j), (chunk,), dtype=jnp.float32
+            )
+            bits = u < binarize_prob(drow, bch)
+            packed = _pack_bool_lastdim(bits)
+            if want_residual:
+                return packed, drow - jnp.where(bits, bch, -bch)
+            return packed, jnp.zeros((), jnp.float32)
+
+        return jax.vmap(per_client)(client_keys, dch)
+
+    packed_c, res_c = jax.lax.map(one_chunk, jnp.arange(n_chunks))
+    packed = jnp.moveaxis(packed_c, 0, 1).reshape(m, d_pad // 8)
+    if want_residual:
+        res = jnp.moveaxis(res_c, 0, 1).reshape(m, d_pad)[:, :d]
+        return packed, res
+    return packed, None
+
+
+def packed_sign_batch(deltas: jax.Array, *, chunk: int = PACK_CHUNK) -> jax.Array:
+    """Deterministic sign codes (signSGD-MV / RSA wire): bit = delta >= 0."""
+    deltas_p, _, _ = _pad_batch(deltas, jnp.ones((deltas.shape[1],)), chunk)
+    return _pack_bool_lastdim(deltas_p >= 0)
+
+
+def packed_counts(packed: jax.Array, *, chunk: int = PACK_CHUNK) -> jax.Array:
+    """Vote counts ``N_i`` straight from the packed wire, chunked over d.
+
+    packed: (M, P) uint8 -> counts (8 * P,) int32. Only O(M * chunk) bits
+    are unpacked at a time; the int8 code matrix never materializes.
+    """
+    m, pbytes = packed.shape
+    cb = min(chunk // 8, pbytes)
+    pb_pad = ((pbytes + cb - 1) // cb) * cb
+    packed = jnp.pad(packed, ((0, 0), (0, pb_pad - pbytes)))
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+
+    def one_chunk(j):
+        pch = jax.lax.dynamic_slice_in_dim(packed, j * cb, cb, axis=1)
+        bits = (pch[..., None] >> shifts) & jnp.uint8(1)  # (M, cb, 8)
+        return jnp.sum(bits.astype(jnp.int32), axis=0).reshape(cb * 8)
+
+    counts = jax.lax.map(one_chunk, jnp.arange(pb_pad // cb)).reshape(-1)
+    return counts[: 8 * pbytes]
+
+
+def packed_residuals(
+    packed: jax.Array, deltas: jax.Array, b: jax.Array, *, chunk: int = PACK_CHUNK
+) -> jax.Array:
+    """Error-feedback residual ``delta - c * b`` recovered from the wire.
+
+    Used when the codes were produced by an external compressor (e.g. the
+    Pallas kernel) that does not expose them unpacked; chunked like
+    :func:`packed_counts`.
+    """
+    m, d = deltas.shape
+    cb = chunk // 8
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    deltas_p, b_full, d_pad = _pad_batch(deltas, b, chunk)
+    pbytes = packed.shape[1]
+    packed = jnp.pad(packed, ((0, 0), (0, max(d_pad // 8 - pbytes, 0))))
+
+    def one_chunk(j):
+        pch = jax.lax.dynamic_slice_in_dim(packed, j * cb, cb, axis=1)
+        dch = jax.lax.dynamic_slice_in_dim(deltas_p, j * chunk, chunk, axis=1)
+        bch = jax.lax.dynamic_slice_in_dim(b_full, j * chunk, chunk, axis=0)
+        bits = ((pch[..., None] >> shifts) & jnp.uint8(1)).reshape(m, cb * 8)
+        return dch - jnp.where(bits > 0, bch, -bch)
+
+    res = jax.lax.map(one_chunk, jnp.arange(d_pad // chunk))
+    return jnp.moveaxis(res, 0, 1).reshape(m, d_pad)[:, :d]

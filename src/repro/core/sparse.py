@@ -2,8 +2,11 @@
 updates"), implemented as a beyond-paper extension.
 
 Each client uploads bits only for the ``k`` coordinates of largest
-|delta| (plus their indices). The server forms the per-coordinate ML
-estimate with a per-coordinate client count::
+|delta| (plus their indices). In the aggregation pipeline this is the
+``SparseWire`` format: the ``ClientCompressor`` bit-packs the k codes and
+``ProBitPlusServer`` routes them here (see ``core/aggregation.py``).
+The server forms the per-coordinate ML estimate with a per-coordinate
+client count::
 
     theta_hat_i = (2 N_i - M_i) / M_i * b_i     (M_i = #clients reporting i)
 

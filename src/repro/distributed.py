@@ -82,9 +82,21 @@ _RULES: dict[str, tuple[str, ...]] = {
 }
 
 
+def set_mesh(mesh):
+    """Compat context: ``jax.set_mesh`` on new JAX; on jax<=0.4 the Mesh
+    object is itself the (thread-resources) context manager."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
 def current_mesh():
-    am = jax.sharding.get_abstract_mesh()
-    return None if am.empty else am
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:  # new global-mesh API
+        am = get_am()
+        return None if am.empty else am
+    from jax._src.mesh import thread_resources  # jax<=0.4 fallback
+
+    pm = thread_resources.env.physical_mesh
+    return None if pm.empty else pm
 
 
 def _axis_entry(mesh, name: str | None, dim: int, used: set[str] | None = None):
@@ -142,8 +154,7 @@ def shard(x: jax.Array, *logical: str | None) -> jax.Array:
 
 def named_sharding(mesh: Mesh, logical: tuple[str | None, ...], shape) -> NamedSharding:
     """Concrete NamedSharding for placing inputs / params on a real mesh."""
-    am = jax.sharding.get_abstract_mesh()
     # spec_for needs the mesh context; compute via a temporary set_mesh
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         spec = spec_for(logical, tuple(shape))
     return NamedSharding(mesh, spec)

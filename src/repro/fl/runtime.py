@@ -5,9 +5,12 @@ One round (jit-compiled, clients vmapped):
      parameters, prox-regularized toward the current global model (Eq. 4);
   2. model differences ``delta^m = w_local^m - w_global`` are formed;
   3. Byzantine clients replace their delta per the configured attack;
-  4. the configured aggregator combines the updates — PRoBit+ quantizes
-     with the dynamic/fixed/oracle ``b`` (+ DP margin) and ML-estimates
-     (Eq. 13); baselines: FedAvg / Fed-GM / signSGD-MV / RSA;
+  4. the configured :class:`repro.core.AggregatorPipeline` (resolved once
+     from the registry — no aggregator branching here) compresses the
+     updates onto the packed one-bit wire and estimates theta_hat —
+     PRoBit+ quantizes with the dynamic/fixed/oracle ``b`` (+ DP margin)
+     and ML-estimates (Eq. 13); baselines: FedAvg / Fed-GM / signSGD-MV /
+     RSA ride the same registry;
   5. the global model steps by ``theta_hat``; the dynamic-b controller
      majority-votes the clients' one-bit loss signals (§VI-B).
 """
@@ -24,21 +27,19 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from ..core import (
+    ATTACKS,
     BControlConfig,
     DPConfig,
+    available_aggregators,
+    build_pipeline,
     get_attack,
-    geometric_median,
     init_b_state,
     loss_bit,
-    ml_estimate_from_counts,
-    probit_plus_aggregate,
-    rsa_aggregate,
-    signsgd_mv_aggregate,
-    stochastic_binarize,
     update_b,
-    oracle_b,
 )
 from ..optim import local_prox_train
+
+_B_MODES = ("dynamic", "fixed", "oracle")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,21 +75,35 @@ class FLConfig:
     # Amplification-by-subsampling would further tighten the DP budget —
     # we keep the per-round eps unchanged (conservative).
     participation: float = 1.0
-
-    @property
-    def n_active(self) -> int:
-        return max(int(self.n_clients * self.participation), 1)
+    agg_step: float = 0.01  # server step for signSGD-MV / RSA
+    gm_iters: int = 16
+    use_kernels: bool = False
+    seed: int = 0
 
     def __post_init__(self):
+        if self.aggregator not in available_aggregators():
+            raise ValueError(
+                f"unknown aggregator {self.aggregator!r}; "
+                f"available: {available_aggregators()}"
+            )
+        if self.attack not in ATTACKS:
+            raise ValueError(
+                f"unknown attack {self.attack!r}; "
+                f"available: {tuple(sorted(ATTACKS))}"
+            )
+        if self.b_mode not in _B_MODES:
+            raise ValueError(
+                f"unknown b_mode {self.b_mode!r}; available: {_B_MODES}"
+            )
         if self.topk_frac < 1.0 and self.dp_epsilon > 0:
             raise ValueError(
                 "topk_frac < 1 releases a data-dependent index set and "
                 "breaks the (eps,0)-DP guarantee; use dense PRoBit+ with DP."
             )
-    agg_step: float = 0.01  # server step for signSGD-MV / RSA
-    gm_iters: int = 16
-    use_kernels: bool = False
-    seed: int = 0
+
+    @property
+    def n_active(self) -> int:
+        return max(int(self.n_clients * self.participation), 1)
 
     @property
     def n_byz(self) -> int:
@@ -101,6 +116,19 @@ class FLConfig:
     @property
     def bctrl(self) -> BControlConfig:
         return BControlConfig(self.b_mode, self.b_init)
+
+    def pipeline(self):
+        """The shared :class:`repro.core.AggregatorPipeline` for this run."""
+        return build_pipeline(
+            self.aggregator,
+            dp=self.dp,
+            b_mode=self.b_mode,
+            error_feedback=self.error_feedback,
+            topk_frac=self.topk_frac,
+            agg_step=self.agg_step,
+            gm_iters=self.gm_iters,
+            use_kernels=self.use_kernels,
+        )
 
 
 class FLSimulation:
@@ -128,6 +156,9 @@ class FLSimulation:
         self.client_y = jnp.asarray(client_y)
         self.test = {k: jnp.asarray(v) for k, v in test.items()}
         self.d = w0.shape[0]
+        # All aggregator-specific behavior lives in this pipeline object —
+        # the runtime only orchestrates local training and state updates.
+        self.pipeline = cfg.pipeline()
         self._round = jax.jit(self._round_impl)
         self.history: list[dict] = []
 
@@ -145,52 +176,6 @@ class FLSimulation:
         return {"x": bx, "y": by}
 
     # -- one round ----------------------------------------------------------
-
-    def _aggregate(self, key, deltas, b_scalar, residuals):
-        cfg = self.cfg
-        m = deltas.shape[0]
-        if cfg.aggregator == "fedavg":
-            return jnp.mean(deltas, axis=0), residuals
-        if cfg.aggregator == "fed_gm":
-            return geometric_median(deltas, cfg.gm_iters), residuals
-        if cfg.aggregator in ("signsgd_mv", "rsa"):
-            codes = jnp.where(deltas >= 0, jnp.int8(1), jnp.int8(-1))
-            if cfg.aggregator == "signsgd_mv":
-                return signsgd_mv_aggregate(codes, cfg.agg_step), residuals
-            return rsa_aggregate(codes, cfg.agg_step), residuals
-        # PRoBit+
-        use_ef = cfg.error_feedback and not cfg.dp.enabled
-        eff = deltas + residuals if use_ef else deltas
-        if cfg.b_mode == "oracle":
-            b_vec = oracle_b(eff, cfg.dp)
-        else:
-            b_eff = b_scalar
-            if cfg.dp.enabled:
-                b_eff = b_eff + (1.0 + 1.0 / cfg.dp.epsilon) * cfg.dp.l1_sensitivity
-            b_vec = jnp.full((self.d,), b_eff, jnp.float32)
-        keys = jax.random.split(key, m)
-        if cfg.topk_frac < 1.0:
-            from ..core.sparse import sparse_aggregate, topk_binarize
-
-            k = max(int(self.d * cfg.topk_frac), 1)
-            idx, codes = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
-                keys, eff, b_vec, k
-            )
-            theta = sparse_aggregate(idx, codes, b_vec, self.d)
-            if use_ef:
-                rows = jnp.arange(eff.shape[0])[:, None]
-                sent = jnp.zeros_like(eff).at[rows, idx].set(
-                    codes.astype(jnp.float32)
-                )
-                # unreported coordinates carry their full delta forward
-                residuals = eff - sent * b_vec
-            return theta, residuals
-        codes = jax.vmap(stochastic_binarize, in_axes=(0, 0, None))(
-            keys, eff, b_vec
-        )
-        if use_ef:
-            residuals = eff - codes.astype(jnp.float32) * b_vec
-        return probit_plus_aggregate(codes, b_vec), residuals
 
     def _round_impl(self, key, w_global, w_locals, b, batches, residuals):
         cfg = self.cfg
@@ -226,7 +211,7 @@ class FLSimulation:
         n_byz = int(cfg.n_active * cfg.byz_frac)
         deltas_att = get_attack(cfg.attack)(k_att, deltas, n_byz)
 
-        theta, res_new = self._aggregate(k_q, deltas_att, b.b, res_sel)
+        theta, res_new = self.pipeline(k_q, deltas_att, b.b, res_sel)
         w_global_new = w_global + theta
 
         bits = jax.vmap(loss_bit)(loss_before, loss_after)

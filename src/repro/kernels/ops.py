@@ -4,6 +4,13 @@ These accept flat (N,) vectors of arbitrary length, handle padding to the
 (rows, 1024) tile layout, and dispatch to the kernels. ``interpret`` is
 auto-selected: True on CPU (the container's validation mode), False on TPU
 (the deployment target).
+
+``stoch_quant_pack`` / ``bit_aggregate`` are the ``use_kernels=True``
+engine of the "probit_plus" :class:`repro.core.AggregatorPipeline`: they
+produce and consume the same packed uint8 wire as the pure-JAX chunked
+path (``repro.core.quantizer.packed_binarize_batch`` / ``packed_counts``),
+so the two are interchangeable per wire (validated in
+``tests/test_pipeline.py``).
 """
 
 from __future__ import annotations

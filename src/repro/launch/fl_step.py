@@ -10,6 +10,11 @@ uint8 vote counts. Cross-pod traffic is the psum of the count pytree —
 slowest-link level. After the scan the Eq.-13 ML estimate updates the
 global model, and the dynamic-b controller consumes the clients' one-bit
 loss votes.
+
+The quantize probability and the count->theta estimate are NOT
+re-implemented here: both come from the shared aggregation pipeline
+(``repro.core.build_pipeline("probit_plus")``) so the mesh path speaks
+the same wire protocol as the simulation and the Pallas kernels.
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core import build_pipeline
 from ..distributed import current_mesh, spec_for
 from ..models import train_loss
 from ..models.config import ModelConfig
@@ -69,9 +75,13 @@ def make_fl_train_step(cfg: ModelConfig, fl: DistFLConfig, param_specs):
     m_seq * n_pods = clients_per_round.
     """
 
+    # Shared pipeline pieces: Eq.-5 bit probability (client half) and the
+    # Eq.-13 count->theta estimate (server half) — same objects the CPU
+    # simulation and kernels dispatch through.
+    pipeline = build_pipeline("probit_plus")
+
     def quantize_leaf(key, delta, b):
-        d = delta.astype(jnp.float32)
-        p = 0.5 + 0.5 * jnp.clip(d, -b, b) / b
+        p = pipeline.compressor.bit_probability(delta, b)
         if fl.rand_bits == 16:
             # 16-bit threshold compare: halves random-draw memory; the
             # probability granularity of 2^-16 adds relative bias < 1.6e-5.
@@ -156,7 +166,7 @@ def make_fl_train_step(cfg: ModelConfig, fl: DistFLConfig, param_specs):
             # Eq. 13 ML estimate; counts are exact vote totals across pods
             # (the psum over "pod" is induced by the sum over the client dim)
             def upd(cnt, w):
-                theta = (2.0 * cnt.astype(jnp.float32) - m_total) / m_total * b
+                theta = pipeline.server.from_counts(cnt, m_total, b)
                 return (w.astype(jnp.float32) + theta).astype(w.dtype)
         else:
 

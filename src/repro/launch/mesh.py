@@ -11,19 +11,24 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the API supports them
+    (jax>=0.5); plain make_mesh on jax 0.4."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi-pod doubles along a leading "pod" axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Degenerate 1-device mesh for CPU integration tests of the
     distributed code path (same axis names as production)."""
-    return jax.make_mesh(
-        (1, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((1, model), ("data", "model"))

@@ -25,6 +25,7 @@ from ..data import make_lm_streams
 from ..models import build_specs, sample_batch
 from ..models.spec import init_params, param_pspecs, count_params
 from .fl_step import DistFLConfig, make_fl_train_step
+from ..distributed import set_mesh
 from .mesh import make_host_mesh, make_production_mesh
 
 
@@ -53,7 +54,7 @@ def main():
     mesh = (
         make_production_mesh() if args.production_mesh else make_host_mesh()
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         specs = build_specs(cfg)
         pspecs = param_pspecs(specs, fsdp_axis="data")
         params = init_params(specs, jax.random.PRNGKey(0))

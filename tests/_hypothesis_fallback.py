@@ -1,0 +1,89 @@
+"""Minimal stand-in for the optional ``hypothesis`` dependency.
+
+The tier-1 suite must run green on a bare container (no ``pip install``).
+When ``hypothesis`` is absent, test modules fall back to this shim::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_fallback import given, settings, st
+
+It implements just the API surface the suite uses — ``@given`` /
+``@settings`` and the ``integers`` / ``floats`` / ``sampled_from``
+strategies — by running each property test on a deterministic sample of
+pseudo-random examples (seeded per test name, so failures reproduce).
+No shrinking, no database; install ``hypothesis`` for the real engine.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+# Cap the fallback's example count: the shim has no deadline management,
+# so keep bare-container suite runtime bounded while still exercising a
+# meaningful sample of the property space.
+_MAX_FALLBACK_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        seq = list(elements)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+
+st = _Strategies()
+
+
+def given(*strategies: _Strategy):
+    """Run the test body over deterministically sampled examples.
+
+    Works for plain functions and methods: any positional args supplied by
+    pytest (e.g. ``self``) are passed through first, then the drawn values.
+    """
+
+    def deco(fn):
+        def run(*args):
+            n = min(getattr(run, "_max_examples", 20), _MAX_FALLBACK_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                fn(*args, *[s.draw(rng) for s in strategies])
+
+        # NOTE: deliberately not functools.wraps(fn) — copying __wrapped__
+        # would make pytest see the original (drawn) parameters as fixtures.
+        run.__name__ = fn.__name__
+        run.__qualname__ = fn.__qualname__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        run._max_examples = 20
+        return run
+
+    return deco
+
+
+def settings(*, max_examples: int | None = None, **_kw):
+    """Accepts (and mostly ignores) hypothesis settings; honors max_examples."""
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -20,7 +20,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.distributed import spec_for, use_batch_axes
+from repro.distributed import set_mesh, spec_for, use_batch_axes
 from repro.launch.fl_step import DistFLConfig, make_fl_train_step
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_specs, sample_batch
@@ -31,7 +31,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 def test_spec_rules_divisibility():
     mesh = make_host_mesh()  # sizes 1 -> everything divisible
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         assert spec_for(("batch", None), (4, 8)) == P("data", None)
         assert spec_for(("heads", None), (3, 8)) == P("model", None)
 
@@ -60,7 +60,7 @@ def test_fl_round_semantics_host_mesh():
     """The distributed FL round must decrease client loss and keep the
     global params finite on a 1-device mesh (pure semantics check)."""
     cfg = configs.reduced(configs.get_config("qwen2-1.5b"))
-    with jax.set_mesh(make_host_mesh()):
+    with set_mesh(make_host_mesh()):
         specs = build_specs(cfg)
         params = init_params(specs, jax.random.PRNGKey(0))
         fl = DistFLConfig(clients_per_round=2, local_steps=2, lr=0.05)
@@ -85,7 +85,7 @@ def test_fl_round_semantics_host_mesh():
 def test_counts_bounded_by_clients():
     """Vote counts are in [0, M] — the ML estimate stays within [-b, b]."""
     cfg = configs.reduced(configs.get_config("qwen2-1.5b"))
-    with jax.set_mesh(make_host_mesh()):
+    with set_mesh(make_host_mesh()):
         specs = build_specs(cfg)
         params = init_params(specs, jax.random.PRNGKey(0))
         p0 = jax.tree.map(lambda a: a.astype(jnp.float32), params)
@@ -121,12 +121,12 @@ def test_dryrun_subprocess_8_devices(tmp_path):
         from repro.models.spec import param_pspecs
         from repro.launch.fl_step import DistFLConfig, make_fl_train_step
         from repro.models import input_specs, input_logical
-        from repro.distributed import spec_for
+        from repro.distributed import set_mesh, spec_for
+        from repro.launch.mesh import make_mesh
 
         cfg = configs.reduced(configs.get_config("qwen3-moe-30b-a3b"))
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        with set_mesh(mesh):
             specs = build_specs(cfg)
             pspecs = param_pspecs(specs, fsdp_axis="data")
             params_abs = jax.tree.map(

@@ -1,0 +1,232 @@
+"""Wire-format parity tests for the shared AggregatorPipeline.
+
+Fixed-seed assertions that the packed uint8 wire (pure-JAX chunked path
+and Pallas kernel interpret path) reproduces the dense reference math for
+PRoBit+ — with and without error feedback, top-k, and the DP margin — and
+that every registered aggregator matches its legacy formula exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DPConfig,
+    available_aggregators,
+    build_pipeline,
+    codes_to_counts,
+    fedavg_aggregate,
+    geometric_median,
+    ml_estimate_from_counts,
+    packed_counts,
+    probit_plus_aggregate,
+    rsa_aggregate,
+    signsgd_mv_aggregate,
+)
+from repro.core.aggregation import PackedWire, SparseWire, _unpack_rows
+from repro.core.sparse import sparse_aggregate, topk_binarize
+
+M, D = 8, 3000
+CHUNK = 512  # small chunk to force a multi-chunk wire in tests
+KEY = jax.random.PRNGKey(42)
+B = jnp.float32(0.05)
+
+
+@pytest.fixture(scope="module")
+def deltas():
+    return 0.01 * jax.random.normal(KEY, (M, D))
+
+
+@pytest.fixture(scope="module")
+def zeros_res():
+    return jnp.zeros((M, D), jnp.float32)
+
+
+def _unpacked_theta(wire: PackedWire):
+    """Dense-reference Eq. 13 estimate from the wire's own codes."""
+    codes = _unpack_rows(wire.packed, wire.d)
+    return probit_plus_aggregate(codes, wire.b), codes
+
+
+def test_registry_has_all_five_aggregators():
+    assert available_aggregators() == (
+        "fed_gm",
+        "fedavg",
+        "probit_plus",
+        "rsa",
+        "signsgd_mv",
+    )
+
+
+def test_packed_counts_match_dense_counts(deltas, zeros_res):
+    pipe = build_pipeline("probit_plus", chunk=CHUNK)
+    wire, _ = pipe.compressor.compress(KEY, deltas, B, zeros_res)
+    codes = _unpack_rows(wire.packed, D)
+    np.testing.assert_array_equal(
+        np.asarray(packed_counts(wire.packed, chunk=CHUNK)[:D]),
+        np.asarray(codes_to_counts(codes)),
+    )
+
+
+def test_packed_pipeline_matches_dense_reference(deltas, zeros_res):
+    """Chunked packed path == dense codes math, bit for bit."""
+    pipe = build_pipeline("probit_plus", chunk=CHUNK)
+    theta, res = pipe(KEY, deltas, B, zeros_res)
+    wire, _ = pipe.compressor.compress(KEY, deltas, B, zeros_res)
+    theta_ref, _ = _unpacked_theta(wire)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(zeros_res))
+
+
+def test_packed_pipeline_with_error_feedback(deltas):
+    """EF residual == eff - c*b for the codes actually on the wire, and the
+    residual feeds back into the next round's effective update."""
+    pipe = build_pipeline("probit_plus", error_feedback=True, chunk=CHUNK)
+    res0 = 1e-3 * jax.random.normal(jax.random.fold_in(KEY, 7), (M, D))
+    eff = deltas + res0
+    wire, res1 = pipe.compressor.compress(KEY, deltas, B, res0)
+    _, codes = _unpacked_theta(wire)
+    np.testing.assert_allclose(
+        np.asarray(res1),
+        np.asarray(eff - codes.astype(jnp.float32) * wire.b),
+        rtol=1e-5,
+        atol=1e-7,
+    )
+    assert float(jnp.max(jnp.abs(res1))) > 0.0
+
+
+def test_packed_pipeline_with_dp_margin(deltas, zeros_res):
+    """The DP b-floor (Thm 3 margin) must be applied on the wire's b."""
+    eps, sens = 0.1, 2e-4
+    pipe = build_pipeline(
+        "probit_plus", dp=DPConfig(eps, sens), chunk=CHUNK
+    )
+    wire, _ = pipe.compressor.compress(KEY, deltas, B, zeros_res)
+    b_expected = float(B) + (1.0 + 1.0 / eps) * sens
+    np.testing.assert_allclose(np.asarray(wire.b), b_expected, rtol=1e-6)
+    theta, _ = pipe(KEY, deltas, B, zeros_res)
+    counts = packed_counts(wire.packed, chunk=CHUNK)[:D]
+    np.testing.assert_allclose(
+        np.asarray(theta),
+        np.asarray(ml_estimate_from_counts(counts, M, wire.b)),
+        rtol=1e-6,
+    )
+
+
+def test_topk_pipeline_matches_sparse_reference(deltas, zeros_res):
+    """Top-k wire reproduces core/sparse exactly (same key schedule)."""
+    frac = 0.25
+    pipe = build_pipeline("probit_plus", topk_frac=frac, chunk=CHUNK)
+    theta, _ = pipe(KEY, deltas, B, zeros_res)
+    wire, _ = pipe.compressor.compress(KEY, deltas, B, zeros_res)
+    assert isinstance(wire, SparseWire)
+    k = max(int(D * frac), 1)
+    keys = jax.random.split(KEY, M)
+    b_vec = jnp.full((D,), B, jnp.float32)
+    idx, codes = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
+        keys, deltas, b_vec, k
+    )
+    theta_ref = sparse_aggregate(idx, codes, b_vec, D)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_ref), rtol=1e-6)
+
+
+def test_kernel_pipeline_matches_dense_within_quantizer_tolerance(
+    deltas, zeros_res
+):
+    """Pallas interpret-mode wire: independent draws, same distribution.
+
+    Each coordinate of theta_hat has std <= b/sqrt(M); both paths must land
+    within 6 sigma of the true mean and of each other (union bound over
+    D coords keeps the false-positive probability negligible)."""
+    mean_delta = jnp.mean(deltas, axis=0)
+    sigma = float(B) / np.sqrt(M)
+    pk = build_pipeline("probit_plus", use_kernels=True)
+    pj = build_pipeline("probit_plus", chunk=CHUNK)
+    assert pk.compressor.use_kernels and pk.server.use_kernels
+    theta_k, _ = pk(KEY, deltas, B, zeros_res)
+    theta_j, _ = pj(KEY, deltas, B, zeros_res)
+    assert float(jnp.max(jnp.abs(theta_k - mean_delta))) < 6 * sigma
+    assert float(jnp.max(jnp.abs(theta_j - mean_delta))) < 6 * sigma
+    assert float(jnp.max(jnp.abs(theta_k - theta_j))) < 12 * sigma
+
+
+@pytest.mark.parametrize("jax_chunk", [1024, 8192])  # 8192 = default, pads
+def test_kernel_and_jax_wires_are_interchangeable(deltas, zeros_res, jax_chunk):
+    """One canonical wire: the kernel server must decode the pure-JAX wire
+    and vice versa, coordinate for coordinate — including when the two
+    paths' pad widths differ (default chunk 8192 vs 1024-lane kernel)."""
+    pj = build_pipeline("probit_plus", chunk=jax_chunk)
+    pk = build_pipeline("probit_plus", use_kernels=True)
+    wire_j, _ = pj.compressor.compress(KEY, deltas, B, zeros_res)
+    wire_k, _ = pk.compressor.compress(KEY, deltas, B, zeros_res)
+    # kernel server on the pure-JAX wire
+    theta_a = pk.server.aggregate(wire_j)
+    theta_b = pj.server.aggregate(wire_j)
+    np.testing.assert_allclose(np.asarray(theta_a), np.asarray(theta_b), rtol=1e-6)
+    # pure-JAX server on the kernel wire
+    theta_c = pj.server.aggregate(wire_k)
+    theta_d = pk.server.aggregate(wire_k)
+    np.testing.assert_allclose(np.asarray(theta_c), np.asarray(theta_d), rtol=1e-6)
+
+
+def test_baseline_pipelines_match_legacy_formulas(deltas, zeros_res):
+    sign_codes = jnp.where(deltas >= 0, jnp.int8(1), jnp.int8(-1))
+    cases = {
+        "fedavg": fedavg_aggregate(deltas),
+        "fed_gm": geometric_median(deltas, 16),
+        "signsgd_mv": signsgd_mv_aggregate(sign_codes, 0.01),
+        "rsa": rsa_aggregate(sign_codes, 0.01),
+    }
+    for name, ref in cases.items():
+        pipe = build_pipeline(name, agg_step=0.01, gm_iters=16, chunk=CHUNK)
+        theta, res = pipe(KEY, deltas, B, zeros_res)
+        np.testing.assert_allclose(
+            np.asarray(theta), np.asarray(ref), rtol=1e-5, atol=1e-7, err_msg=name
+        )
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(zeros_res))
+
+
+def test_simulation_kernel_path_matches_dense_reference():
+    """FLSimulation(use_kernels=True) runs the packed Pallas wire and its
+    per-round global update stays within stochastic-quantizer tolerance of
+    the dense reference on a fixed seed."""
+    from repro.data import make_classification, partition_label_skew
+    from repro.fl import FLConfig, FLSimulation
+    from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
+
+    (xtr, ytr), (xte, yte) = make_classification(0, n_train=800, n_test=200)
+    m = 4
+    parts = partition_label_skew(ytr, m, 2, 50, seed=1)
+    cx = np.stack([xtr[i] for i in parts])
+    cy = np.stack([ytr[i] for i in parts])
+    p0 = init_mlp(jax.random.PRNGKey(0), hidden=16)
+
+    sims = {}
+    for use_kernels in (False, True):
+        cfg = FLConfig(
+            n_clients=m, aggregator="probit_plus", rounds=1, local_epochs=1,
+            use_kernels=use_kernels, seed=0,
+        )
+        sim = FLSimulation(
+            cfg, p0,
+            functools.partial(xent_loss, mlp_logits),
+            functools.partial(accuracy, mlp_logits),
+            cx, cy, {"x": xte, "y": yte},
+        )
+        assert sim.pipeline.compressor.use_kernels == use_kernels
+        sim.run(rounds=1, eval_every=1)
+        sims[use_kernels] = sim
+
+    w_dense = sims[False].w_global
+    w_kernel = sims[True].w_global
+    d = w_dense.shape[0]
+    # theta_hat coordinates differ by independent quantizer draws with std
+    # <= b/sqrt(M) each; allow 6x the resulting rms over d coordinates
+    # (the prox-SGD kernel's fused fma ordering adds only ~ulp-level noise).
+    b = float(sims[False].history[-1]["b"]) if sims[False].history else 0.01
+    tol = 6.0 * b * np.sqrt(2.0 * d / m)
+    diff = float(jnp.linalg.norm(w_dense - w_kernel))
+    assert diff < tol, (diff, tol)
