@@ -1,4 +1,14 @@
-"""Shared benchmark harness utilities."""
+"""Shared benchmark harness utilities.
+
+Two ways to run FL scenarios from a benchmark module:
+
+* :func:`run_fl` — one sequential :class:`repro.fl.FLSimulation` (kept as
+  the reference driver and for parity/timing comparisons);
+* :func:`campaign_task` — the task provider that plugs the same
+  classification task into the vectorized campaign engine
+  (:func:`repro.sim.run_campaign`), which is how the figure/table grids
+  run by default.
+"""
 
 from __future__ import annotations
 
@@ -15,6 +25,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.data import make_classification, partition_label_skew  # noqa: E402
 from repro.fl import FLConfig, FLSimulation  # noqa: E402
 from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss  # noqa: E402
+from repro.sim import Task  # noqa: E402
 
 # Benchmark scale (CPU container): paper protocol at reduced scale.
 ROUNDS = int(os.environ.get("PROBIT_BENCH_ROUNDS", "60"))
@@ -31,10 +42,33 @@ def task(n_clients: int, classes_per_client: int = 2, seed: int = 0):
     return cx, cy, {"x": xte, "y": yte}
 
 
+@functools.lru_cache(maxsize=None)
+def _mlp_p0(hidden: int = 48):
+    return init_mlp(jax.random.PRNGKey(0), hidden=hidden)
+
+
+def campaign_task(cfg: FLConfig) -> Task:
+    """Campaign-engine task provider for the benchmark classification task.
+
+    Same data, partition, and initial model as :func:`run_fl`, keyed on
+    the cell's ``n_clients`` (cached), so a campaign cell at a fixed seed
+    reproduces the sequential driver bit for bit.
+    """
+    cx, cy, test = task(cfg.n_clients, 2)
+    return Task(
+        init_params=_mlp_p0(),
+        loss_fn=functools.partial(xent_loss, mlp_logits),
+        acc_fn=functools.partial(accuracy, mlp_logits),
+        client_x=cx,
+        client_y=cy,
+        test=test,
+    )
+
+
 def run_fl(n_clients: int, rounds: int = None, classes_per_client: int = 2, **kw) -> FLSimulation:
     cx, cy, test = task(n_clients, classes_per_client)
     cfg = FLConfig(n_clients=n_clients, rounds=rounds or ROUNDS, local_epochs=2, **kw)
-    p0 = init_mlp(jax.random.PRNGKey(0), hidden=48)
+    p0 = _mlp_p0()
     sim = FLSimulation(
         cfg,
         p0,

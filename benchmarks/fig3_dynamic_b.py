@@ -1,25 +1,44 @@
 """Paper Fig. 3: training with dynamic vs fixed vs oracle quantization
-parameter b (Byzantine- and DP-free, as in the paper's ablation)."""
+parameter b (Byzantine- and DP-free, as in the paper's ablation).
+
+Declared as a 3-cell ``CampaignSpec`` over the ``b_mode`` axis. ``b_mode``
+shapes the compiled program (oracle computes a per-coordinate max), so the
+engine runs one grouped program per mode, each scanned over rounds —
+still one declaration, no per-cell Python driver::
+
+    result = run_campaign(fig3_spec(rounds), common.campaign_task)
+    result.cell("dynamic").metrics["b"]   # (n_seeds, rounds) b trajectory
+"""
 
 from __future__ import annotations
 
-import time
+from .common import ROUNDS, campaign_task, emit  # sets sys.path first
 
-from .common import emit, run_fl
+from repro.sim import CampaignSpec, CellSpec, run_campaign  # noqa: E402
+
+MODES = ("dynamic", "fixed", "oracle")
+
+
+def fig3_spec(rounds: int | None = None) -> CampaignSpec:
+    return CampaignSpec(
+        base=dict(
+            n_clients=20, rounds=rounds or ROUNDS, local_epochs=2,
+            aggregator="probit_plus",
+        ),
+        cells=tuple(CellSpec(mode, {"b_mode": mode}) for mode in MODES),
+        seeds=(0,),
+    )
 
 
 def main(rounds: int | None = None) -> dict:
+    result = run_campaign(fig3_spec(rounds), campaign_task)
     out = {}
-    for mode in ("dynamic", "fixed", "oracle"):
-        t0 = time.time()
-        sim = run_fl(20, rounds, aggregator="probit_plus", b_mode=mode)
-        acc = sim.history[-1]["acc"]
-        out[mode] = {"acc": acc, "b_final": sim.history[-1]["b"]}
-        emit(
-            f"fig3_b_{mode}",
-            (time.time() - t0) / sim.cfg.rounds * 1e6,
-            f"acc={acc:.4f};b_final={sim.history[-1]['b']:.5f}",
-        )
+    for name, us, _derived in result.emit_rows("fig3_b"):
+        cell = result.cell(name.removeprefix("fig3_b_"))
+        acc = float(cell.metrics["acc"][0, -1])
+        b_final = float(cell.metrics["b"][0, -1])
+        out[cell.name] = {"acc": acc, "b_final": b_final}
+        emit(name, us, f"acc={acc:.4f};b_final={b_final:.5f}")
     return out
 
 

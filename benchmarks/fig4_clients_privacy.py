@@ -1,40 +1,61 @@
 """Paper Fig. 4: (left) accuracy vs number of uploading clients M —
 validates the O(1/M) error decay reaching FedAvg; (right) accuracy vs
-privacy loss eps at fixed M."""
+privacy loss eps at fixed M.
+
+One ``CampaignSpec`` covers both panels: an (M x aggregator) sweep plus a
+privacy-eps sweep. M changes array shapes and eps changes the compiled DP
+branch, so every cell here lands in its own execution group — this is the
+campaign engine's grouped fallback, still one declaration and one result
+object::
+
+    result = run_campaign(fig4_spec(rounds), common.campaign_task)
+    result.cell("M=20_probit").metrics["theta_mse"]  # O(1/M) per round
+"""
 
 from __future__ import annotations
 
-import time
+from .common import ROUNDS, campaign_task, emit  # sets sys.path first
 
-from .common import emit, run_fl
+from repro.sim import CampaignSpec, CellSpec, run_campaign  # noqa: E402
+
+CLIENTS = (5, 10, 20, 40)
+EPSILONS = (1.0, 0.1, 0.01)
+
+
+def fig4_spec(rounds: int | None = None) -> CampaignSpec:
+    cells = []
+    for m in CLIENTS:
+        cells.append(CellSpec(f"M={m}_probit", {"n_clients": m}))
+        cells.append(
+            CellSpec(f"M={m}_fedavg", {"n_clients": m, "aggregator": "fedavg"})
+        )
+    for eps in EPSILONS:
+        cells.append(CellSpec(f"eps={eps}", {"n_clients": 20, "dp_epsilon": eps}))
+    return CampaignSpec(
+        base=dict(rounds=rounds or ROUNDS, local_epochs=2, aggregator="probit_plus"),
+        cells=tuple(cells),
+        seeds=(0,),
+    )
 
 
 def main(rounds: int | None = None) -> dict:
+    result = run_campaign(fig4_spec(rounds), campaign_task)
+    rows = {name: (us, derived) for name, us, derived in result.emit_rows("fig4")}
     out: dict = {"clients": {}, "privacy": {}}
-    for m in (5, 10, 20, 40):
-        t0 = time.time()
-        pb = run_fl(m, rounds, aggregator="probit_plus")
-        fa = run_fl(m, rounds, aggregator="fedavg")
-        gap = fa.history[-1]["acc"] - pb.history[-1]["acc"]
-        out["clients"][m] = {
-            "probit": pb.history[-1]["acc"],
-            "fedavg": fa.history[-1]["acc"],
-            "gap": gap,
-        }
+    for m in CLIENTS:
+        pb = float(result.cell(f"M={m}_probit").metrics["acc"][0, -1])
+        fa = float(result.cell(f"M={m}_fedavg").metrics["acc"][0, -1])
+        gap = fa - pb
+        out["clients"][m] = {"probit": pb, "fedavg": fa, "gap": gap}
         emit(
             f"fig4_clients_M{m}",
-            (time.time() - t0) / (2 * pb.cfg.rounds) * 1e6,
-            f"probit={pb.history[-1]['acc']:.4f};fedavg={fa.history[-1]['acc']:.4f};gap={gap:.4f}",
+            rows[f"fig4_M={m}_probit"][0],
+            f"probit={pb:.4f};fedavg={fa:.4f};gap={gap:.4f}",
         )
-    for eps in (1.0, 0.1, 0.01):
-        t0 = time.time()
-        sim = run_fl(20, rounds, aggregator="probit_plus", dp_epsilon=eps)
-        out["privacy"][eps] = sim.history[-1]["acc"]
-        emit(
-            f"fig4_privacy_eps{eps}",
-            (time.time() - t0) / sim.cfg.rounds * 1e6,
-            f"acc={sim.history[-1]['acc']:.4f}",
-        )
+    for eps in EPSILONS:
+        acc = float(result.cell(f"eps={eps}").metrics["acc"][0, -1])
+        out["privacy"][eps] = acc
+        emit(f"fig4_privacy_eps{eps}", rows[f"fig4_eps={eps}"][0], f"acc={acc:.4f}")
     return out
 
 

@@ -1,12 +1,29 @@
 """Paper Table I / Figs. 5-8: test accuracy under each Byzantine attack at
 10% malicious clients, across all aggregation methods (b fixed at 0.01 as
-in the paper's Byzantine section)."""
+in the paper's Byzantine section).
+
+The grid runs through the campaign engine as one ``CampaignSpec``: the
+4 attacks x 6 methods become 24 cells; cells differing only in the attack
+share a vmapped program (the attack axis is a traced ``lax.switch`` id),
+so the engine compiles one program per *method* instead of one per cell::
+
+    spec = table1_spec(rounds=60, byz_frac=0.1)
+    result = repro.sim.run_campaign(spec, common.campaign_task)
+    result.final("acc")            # {cell_name: (mean, ci), ...}
+
+``main`` additionally replays the same cell set through the sequential
+``FLSimulation`` loop, asserts per-cell accuracies agree to 1e-6 at the
+fixed seed, and emits the wall-clock comparison (set ``parity=False`` or
+``PROBIT_BENCH_NO_PARITY=1`` to skip the sequential replay)."""
 
 from __future__ import annotations
 
+import os
 import time
 
-from .common import emit, run_fl
+from .common import ROUNDS, campaign_task, emit, run_fl  # sets sys.path first
+
+from repro.sim import CampaignSpec, CellSpec, run_campaign  # noqa: E402
 
 ATTACKS = ("gaussian", "sign_flip", "zero_gradient", "sample_duplicate")
 METHODS = (
@@ -19,25 +36,77 @@ METHODS = (
 )
 
 
-def main(rounds: int | None = None, byz_frac: float = 0.1) -> dict:
-    out: dict = {}
+def table1_spec(rounds: int | None = None, byz_frac: float = 0.1) -> CampaignSpec:
+    """The Table-I grid as a campaign declaration (24 cells, 1 seed)."""
+    cells = []
     for attack in ATTACKS:
-        out[attack] = {}
         for name, kw in METHODS:
-            kw = dict(kw)
-            kw.setdefault("aggregator", "probit_plus")
-            t0 = time.time()
-            sim = run_fl(
-                10, rounds, byz_frac=byz_frac, attack=attack,
-                b_mode="fixed", **kw,
+            overrides = dict(kw)
+            overrides.setdefault("aggregator", "probit_plus")
+            overrides["attack"] = attack
+            cells.append(CellSpec(f"{attack}_{name}", overrides))
+    return CampaignSpec(
+        base=dict(
+            n_clients=10,
+            rounds=rounds or ROUNDS,
+            local_epochs=2,
+            byz_frac=byz_frac,
+            b_mode="fixed",
+        ),
+        cells=tuple(cells),
+        seeds=(0,),
+    )
+
+
+def main(rounds: int | None = None, byz_frac: float = 0.1, parity: bool | None = None) -> dict:
+    if parity is None:
+        parity = not os.environ.get("PROBIT_BENCH_NO_PARITY")
+    spec = table1_spec(rounds, byz_frac)
+    n_rounds = spec.base["rounds"]
+
+    t0 = time.perf_counter()
+    result = run_campaign(spec, campaign_task)
+    t_grid = time.perf_counter() - t0
+
+    out: dict = {attack: {} for attack in ATTACKS}
+    for name, us, derived in result.emit_rows("table1"):
+        emit(name, us, derived)
+    for attack in ATTACKS:
+        for name, _ in METHODS:
+            out[attack][name] = float(
+                result.cell(f"{attack}_{name}").metrics["acc"][0, -1]
             )
-            acc = sim.history[-1]["acc"]
-            out[attack][name] = acc
-            emit(
-                f"table1_{attack}_{name}",
-                (time.time() - t0) / sim.cfg.rounds * 1e6,
-                f"acc={acc:.4f}",
-            )
+
+    if parity:
+        # Acceptance check: the vmapped grid must reproduce the sequential
+        # loop per cell (1e-6) and beat it wall-clock on the same cell set.
+        t0 = time.perf_counter()
+        max_diff = 0.0
+        for attack in ATTACKS:
+            for name, kw in METHODS:
+                kw = dict(kw)
+                kw.setdefault("aggregator", "probit_plus")
+                sim = run_fl(
+                    10, n_rounds, byz_frac=byz_frac, attack=attack,
+                    b_mode="fixed", **kw,
+                )
+                max_diff = max(
+                    max_diff, abs(sim.history[-1]["acc"] - out[attack][name])
+                )
+        t_seq = time.perf_counter() - t0
+        emit(
+            "table1_parity",
+            t_grid / (len(spec.cells) * n_rounds) * 1e6,
+            f"max_acc_diff={max_diff:.2e};grid_s={t_grid:.1f};seq_s={t_seq:.1f};"
+            f"speedup={t_seq / t_grid:.2f}x",
+        )
+        assert max_diff <= 1e-6, f"campaign/sequential divergence: {max_diff}"
+        out["_parity"] = {
+            "max_acc_diff": max_diff,
+            "grid_s": t_grid,
+            "seq_s": t_seq,
+            "speedup": t_seq / t_grid,
+        }
     return out
 
 

@@ -433,9 +433,31 @@ class AggregatorPipeline:
         deltas: jax.Array,
         b_scalar: jax.Array,
         residuals: jax.Array,
+        *,
+        flip_n: int = 0,
+        flip_gate: jax.Array | None = None,
     ) -> tuple[jax.Array, jax.Array]:
-        """Full round: compress all clients, aggregate, return (theta, res')."""
+        """Full round: compress all clients, aggregate, return (theta, res').
+
+        ``flip_n > 0`` arms the ``bit_flip`` wire adversary: the first
+        ``flip_n`` clients' codes are inverted *after* compression (see
+        :func:`repro.core.attacks.flip_wire`). ``flip_gate`` optionally
+        gates the flip with a traced boolean, so a vmapped campaign batch
+        can mix bit_flip cells with delta-level-attack cells. Residuals are
+        the honest compressor's (Byzantine rows lie about those too, which
+        is exactly what an adversarial client would do under EF).
+        """
         wire, residuals = self.compressor.compress(key, deltas, b_scalar, residuals)
+        if flip_n:
+            from .attacks import flip_wire
+
+            flipped = flip_wire(wire, flip_n)
+            if flip_gate is None:
+                wire = flipped
+            else:
+                wire = jax.tree.map(
+                    lambda f, w: jnp.where(flip_gate, f, w), flipped, wire
+                )
         return self.server.aggregate(wire), residuals
 
 

@@ -1,22 +1,57 @@
 """Byzantine attacks from the paper's §VI-D, applied to stacked updates.
 
-Each attack rewrites the *first* ``n_byz`` rows of the ``(M, d)`` update
-matrix (the FL runtime shuffles client order, so which clients are Byzantine
-is immaterial). Attacks operate on the full-precision update; bit-based
-schemes then compress the malicious update with the honest quantizer — the
-clipping inside the compressor is exactly the paper's amplitude immunity.
-A Byzantine client in a bit scheme may also send arbitrary bits; the
-``flip_codes`` helper models the strongest such adversary for tests.
+Each *delta-level* attack rewrites the *first* ``n_byz`` rows of the
+``(M, d)`` update matrix (the FL runtime shuffles client order, so which
+clients are Byzantine is immaterial). Attacks operate on the full-precision
+update; bit-based schemes then compress the malicious update with the
+honest quantizer — the clipping inside the compressor is exactly the
+paper's amplitude immunity.
+
+Beyond the paper's four attacks the registry carries two adaptive
+adversaries from the Byzantine-ML literature (both colluding, both aware of
+the honest updates):
+
+* ``alie``  — "A Little Is Enough" [Baruch et al. 2019]-style variance
+  attack: Byzantines upload ``mean - z * std`` of the honest updates, a
+  perturbation sized to hide inside the honest spread.
+* ``ipm``   — inner-product manipulation [Xie et al. 2020]: Byzantines
+  upload a negatively scaled honest mean, targeting
+  ``<aggregate, true mean> < 0``.
+
+A Byzantine client in a bit scheme may also ignore the quantizer and put
+arbitrary bits on the wire. ``bit_flip`` is that adversary as a
+first-class attack: it is a no-op at the delta level and instead inverts
+the first ``n_byz`` clients' *post-quantization* codes on the packed wire
+(:func:`flip_wire`, applied inside
+:meth:`repro.core.AggregatorPipeline.__call__`). For dense wires the
+analogue is row negation. ``flip_codes`` remains the unpacked-codes helper
+used by the Theorem-2 tests.
+
+``ATTACK_IDS`` fixes an integer id per delta-level attack so a whole
+scenario axis of attacks can be a *traced* value: :func:`apply_attack`
+dispatches via ``lax.switch``, which is what lets the campaign engine
+(``repro.sim``) vmap cells that differ only in the attack.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["get_attack", "ATTACKS", "flip_codes"]
+__all__ = [
+    "get_attack",
+    "ATTACKS",
+    "ATTACK_IDS",
+    "WIRE_ATTACKS",
+    "attack_id",
+    "is_wire_attack",
+    "apply_attack",
+    "flip_codes",
+    "flip_wire",
+]
 
 
 def _no_attack(key, updates, n_byz):
@@ -46,20 +81,105 @@ def _sample_duplicate(key, updates, n_byz):
     return updates.at[:n_byz].set(jnp.broadcast_to(updates[n_byz], updates[:n_byz].shape))
 
 
+# z for the ALIE perturbation: the original attack solves for the largest z
+# keeping the malicious update inside the honest majority's acceptance
+# region (a normal quantile in M and n_byz); a fixed z = 1 sits inside that
+# region for every (M, byz_frac <= 0.45) cell in the campaign grids and
+# keeps the attack shape-polymorphic.
+_ALIE_Z = 1.0
+
+
+def _alie(key, updates, n_byz):
+    """ALIE-style variance attack: mean - z * std of the honest updates."""
+    honest = updates[n_byz:]
+    mu = jnp.mean(honest, axis=0)
+    sigma = jnp.std(honest, axis=0)
+    evil = mu - _ALIE_Z * sigma
+    return updates.at[:n_byz].set(jnp.broadcast_to(evil, updates[:n_byz].shape))
+
+
+def _ipm(key, updates, n_byz):
+    """Inner-product manipulation: negatively scaled honest mean."""
+    mu = jnp.mean(updates[n_byz:], axis=0)
+    return updates.at[:n_byz].set(jnp.broadcast_to(-1.1 * mu, updates[:n_byz].shape))
+
+
+# Delta-level registry. Order of ATTACK_IDS is the lax.switch branch order
+# and therefore part of the campaign wire format — append, never reorder.
+ATTACK_IDS: tuple[str, ...] = (
+    "none",
+    "gaussian",
+    "sign_flip",
+    "zero_gradient",
+    "sample_duplicate",
+    "alie",
+    "ipm",
+)
+
 ATTACKS: dict[str, Callable] = {
     "none": _no_attack,
     "gaussian": _gaussian,
     "sign_flip": _sign_flip,
     "zero_gradient": _zero_gradient,
     "sample_duplicate": _sample_duplicate,
+    "alie": _alie,
+    "ipm": _ipm,
+    # wire-level: delta stage is a no-op; the pipeline flips packed codes
+    "bit_flip": _no_attack,
 }
+
+# Attacks that act after quantization, on the wire (see flip_wire).
+WIRE_ATTACKS: frozenset[str] = frozenset({"bit_flip"})
 
 
 def get_attack(name: str) -> Callable:
-    """Return ``attack(key, updates(M,d), n_byz) -> updates``."""
+    """Return the *delta-level* ``attack(key, updates(M,d), n_byz) -> updates``.
+
+    For wire-level attacks (``bit_flip``) this is the identity; the bit
+    inversion happens inside the aggregation pipeline.
+    """
     return ATTACKS[name]
+
+
+def attack_id(name: str) -> int:
+    """Integer id of the delta-level stage of ``name`` (lax.switch index)."""
+    return ATTACK_IDS.index("none" if name in WIRE_ATTACKS else name)
+
+
+def is_wire_attack(name: str) -> bool:
+    return name in WIRE_ATTACKS
+
+
+def apply_attack(idx: jax.Array, key: jax.Array, updates: jax.Array, n_byz: int) -> jax.Array:
+    """Delta-level attack dispatch over a (possibly traced) attack id.
+
+    With a concrete ``idx`` this computes exactly
+    ``ATTACKS[ATTACK_IDS[idx]](key, updates, n_byz)``; with a traced one it
+    lowers to ``lax.switch`` so an attack axis can ride a vmapped campaign
+    cell batch. ``n_byz`` stays static (it shapes the ``.at[:n]`` updates).
+    """
+    branches = [
+        (lambda k, u, _f=ATTACKS[name]: _f(k, u, n_byz)) for name in ATTACK_IDS
+    ]
+    return jax.lax.switch(idx, branches, key, updates)
 
 
 def flip_codes(codes: jax.Array, n_byz: int) -> jax.Array:
     """Worst-case bit adversary: invert the first ``n_byz`` clients' codes."""
     return codes.at[:n_byz].set(-codes[:n_byz])
+
+
+def flip_wire(wire, n_byz: int):
+    """:func:`flip_codes` on the wire itself — the ``bit_flip`` attack.
+
+    Packed wires invert every bit of the first ``n_byz`` rows (bitwise NOT
+    flips each ±1 code; pad bits flip too, but every consumer slices the
+    estimate back to the true dimension, so they are inert). Dense wires
+    negate the rows — the full-precision analogue of inverting every code.
+    """
+    from .aggregation import DenseWire
+
+    if isinstance(wire, DenseWire):
+        return DenseWire(updates=wire.updates.at[:n_byz].set(-wire.updates[:n_byz]))
+    flipped = wire.packed.at[:n_byz].set(jnp.bitwise_not(wire.packed[:n_byz]))
+    return dataclasses.replace(wire, packed=flipped)

@@ -1,6 +1,31 @@
 """Federated-learning runtime: the paper's training protocol (Algorithm 1)
-with pluggable aggregators, Byzantine attacks, and DP."""
+with pluggable aggregators, Byzantine attacks, and DP.
 
+The round math lives in :mod:`repro.fl.rounds` as a pure functional core;
+:class:`FLSimulation` drives it statefully, and :mod:`repro.sim` runs
+whole scenario grids over it."""
+
+from .rounds import (
+    CellParams,
+    RoundContext,
+    RoundState,
+    cell_params,
+    fl_round,
+    init_state,
+    make_context,
+    run_rounds,
+)
 from .runtime import FLConfig, FLSimulation
 
-__all__ = ["FLConfig", "FLSimulation"]
+__all__ = [
+    "FLConfig",
+    "FLSimulation",
+    "RoundState",
+    "RoundContext",
+    "CellParams",
+    "make_context",
+    "init_state",
+    "cell_params",
+    "fl_round",
+    "run_rounds",
+]

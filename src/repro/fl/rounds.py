@@ -1,0 +1,306 @@
+"""Pure functional FL round core — paper Algorithm 1 as state -> state.
+
+This module is the engine under both execution harnesses:
+
+* :class:`repro.fl.FLSimulation` — the stateful, host-driven wrapper that
+  keeps the original experiment API (one jitted round per Python-loop
+  iteration, host-side eval every ``eval_every`` rounds);
+* :mod:`repro.sim` — the campaign engine, which runs *whole scenario
+  grids* as one computation: :func:`run_rounds` multi-rounds via
+  ``lax.scan`` and is vmapped over (cell, seed) batches.
+
+The split between static and traced scenario state is what makes the
+vmapping possible:
+
+* :class:`RoundContext` — everything that shapes the trace: the
+  :class:`~repro.fl.runtime.FLConfig`, task functions, client data, the
+  resolved :class:`~repro.core.AggregatorPipeline`, and the static
+  ``flip_n`` of the ``bit_flip`` wire adversary. One context == one XLA
+  program; cells sharing a context can be batched.
+* :class:`CellParams` — per-cell *traced* scenario knobs (lr, momentum,
+  prox weight, delta-attack id, wire-flip gate). Cells that differ only
+  here ride one vmapped trace (the attack id dispatches via
+  ``lax.switch``, see :func:`repro.core.attacks.apply_attack`).
+* :class:`RoundState` — the evolving per-run state (global/local weights,
+  dynamic-b controller, error-feedback residuals).
+
+:func:`fl_round` reproduces the pre-refactor ``FLSimulation._round_impl``
+operation-for-operation (same RNG schedule: client batches from one key,
+attack/quantizer keys from ``fold_in(key, 1)``, participation sampling
+from ``fold_in(key, 99)``), so a campaign cell at a fixed seed matches the
+sequential simulation to float tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from ..core import (
+    BState,
+    apply_attack,
+    attack_id as _attack_id,
+    init_b_state,
+    is_wire_attack,
+    loss_bit,
+    update_b,
+)
+from ..optim import local_prox_train
+
+__all__ = [
+    "RoundState",
+    "CellParams",
+    "RoundContext",
+    "make_context",
+    "init_state",
+    "cell_params",
+    "round_batches",
+    "fl_round",
+    "evaluate",
+    "run_rounds",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoundState:
+    """Evolving state of one FL run (all leaves are device arrays)."""
+
+    w_global: jax.Array  # (d,)
+    w_locals: jax.Array  # (n_clients, d) personal models
+    b: BState  # dynamic-b controller state
+    residuals: jax.Array  # (n_clients, d) error-feedback residuals
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CellParams:
+    """Traced per-cell scenario knobs — the vmappable campaign axes.
+
+    Leaves may be Python scalars (the simulation path closes over them, so
+    they fold into the trace as constants, reproducing the pre-refactor
+    program exactly) or batched arrays (the campaign path maps over them).
+    """
+
+    lr: Any
+    momentum: Any
+    lam: Any
+    attack_id: Any  # int index into repro.core.ATTACK_IDS (delta stage)
+    flip_gate: Any  # bool: arm the bit_flip wire adversary (needs flip_n>0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundContext:
+    """Static context closed over by the round functions (not a pytree).
+
+    Two cells can share a context — and therefore a compiled program —
+    iff every field here compares equal (the campaign engine groups by the
+    FLConfig fields this depends on; see ``repro.sim.campaign``).
+    """
+
+    cfg: Any  # FLConfig (static hyperparameters & shapes)
+    loss_fn: Callable  # loss_fn(params_pytree, {"x","y"}) -> scalar
+    acc_fn: Callable
+    unravel: Callable
+    pipeline: Any  # repro.core.AggregatorPipeline
+    w0: jax.Array  # (d,) flat initial parameters
+    client_x: jax.Array  # (n_clients, per_client, ...)
+    client_y: jax.Array  # (n_clients, per_client)
+    test: dict
+    flip_n: int  # rows bit-flipped on the wire when a cell's flip_gate is on
+
+    @property
+    def d(self) -> int:
+        return self.w0.shape[0]
+
+
+def make_context(
+    cfg,
+    init_params,
+    loss_fn: Callable,
+    acc_fn: Callable,
+    client_x,
+    client_y,
+    test: dict,
+    *,
+    wire_flip: bool | None = None,
+) -> RoundContext:
+    """Resolve a config + task into a RoundContext.
+
+    ``wire_flip`` arms the static wire-flip slot even when ``cfg.attack``
+    itself is not ``bit_flip`` — the campaign engine sets it when *any*
+    cell in a vmapped group is a bit_flip cell (per-cell ``flip_gate``
+    then selects).
+    """
+    w0, unravel = ravel_pytree(init_params)
+    if wire_flip is None:
+        wire_flip = is_wire_attack(cfg.attack)
+    n_byz = int(cfg.n_active * cfg.byz_frac)
+    return RoundContext(
+        cfg=cfg,
+        loss_fn=loss_fn,
+        acc_fn=acc_fn,
+        unravel=unravel,
+        pipeline=cfg.pipeline(),
+        w0=w0,
+        client_x=jnp.asarray(client_x),
+        client_y=jnp.asarray(client_y),
+        test={k: jnp.asarray(v) for k, v in test.items()},
+        flip_n=n_byz if wire_flip else 0,
+    )
+
+
+def init_state(ctx: RoundContext, b_init=None) -> RoundState:
+    """Fresh run state; ``b_init`` overrides the config's (may be traced)."""
+    cfg = ctx.cfg
+    if b_init is None:
+        b = init_b_state(cfg.bctrl)
+    else:
+        b = BState(b=jnp.asarray(b_init, jnp.float32), prev_vote=jnp.float32(0.0))
+    return RoundState(
+        w_global=ctx.w0,
+        w_locals=jnp.tile(ctx.w0[None], (cfg.n_clients, 1)),
+        b=b,
+        residuals=jnp.zeros((cfg.n_clients, ctx.w0.shape[0]), jnp.float32),
+    )
+
+
+def cell_params(cfg) -> CellParams:
+    """The CellParams a single FLConfig describes (scalar leaves)."""
+    return CellParams(
+        lr=cfg.lr,
+        momentum=cfg.momentum,
+        lam=cfg.lam,
+        attack_id=_attack_id(cfg.attack),
+        flip_gate=is_wire_attack(cfg.attack),
+    )
+
+
+def round_batches(ctx: RoundContext, key: jax.Array) -> dict:
+    """Sample one round's local-training batches for every client."""
+    cfg = ctx.cfg
+    per_client = ctx.client_x.shape[1]
+    steps = max(cfg.local_epochs * per_client // cfg.batch_size, 1)
+    idx = jax.random.randint(
+        key, (cfg.n_clients, steps, cfg.batch_size), 0, per_client
+    )
+    bx = jax.vmap(lambda x, i: x[i])(ctx.client_x, idx)
+    by = jax.vmap(lambda y, i: y[i])(ctx.client_y, idx)
+    return {"x": bx, "y": by}
+
+
+def fl_round(
+    ctx: RoundContext,
+    params: CellParams,
+    key: jax.Array,
+    state: RoundState,
+    batches: dict,
+) -> tuple[RoundState, dict]:
+    """One FL round: local prox-training, attack, aggregate, b-control.
+
+    Returns the next state and per-round metrics: ``loss`` (mean post-
+    training local loss), ``b`` (controller value after the vote), and
+    ``theta_mse`` — the mean squared error of the aggregated ``theta_hat``
+    against the true mean of the (post-attack) uploaded updates, i.e. the
+    pure aggregation error the paper's Theorem 1 bounds at O(1/M).
+    """
+    cfg = ctx.cfg
+    w_global, w_locals, b, residuals = (
+        state.w_global,
+        state.w_locals,
+        state.b,
+        state.residuals,
+    )
+    if cfg.participation < 1.0:
+        sel = jax.random.choice(
+            jax.random.fold_in(key, 99), cfg.n_clients,
+            (cfg.n_active,), replace=False,
+        )
+    else:
+        sel = jnp.arange(cfg.n_clients)
+    w_sel = w_locals[sel]
+    res_sel = residuals[sel]
+    batches = jax.tree.map(lambda a: a[sel], batches)
+
+    def client(w_local, cb, ck):
+        return local_prox_train(
+            ctx.loss_fn,
+            w_global,
+            w_local,
+            ctx.unravel,
+            cb,
+            lr=params.lr,
+            mu=params.momentum,
+            lam=params.lam,
+            use_kernel=cfg.use_kernels,
+        )
+
+    ckeys = jax.random.split(key, cfg.n_active)
+    w_new, loss_before, loss_after = jax.vmap(client)(w_sel, batches, ckeys)
+    deltas = w_new - w_global[None]
+
+    k_att, k_q = jax.random.split(jax.random.fold_in(key, 1))
+    n_byz = int(cfg.n_active * cfg.byz_frac)
+    deltas_att = apply_attack(params.attack_id, k_att, deltas, n_byz)
+
+    theta, res_new = ctx.pipeline(
+        k_q, deltas_att, b.b, res_sel,
+        flip_n=ctx.flip_n, flip_gate=params.flip_gate,
+    )
+    w_global_new = w_global + theta
+
+    bits = jax.vmap(loss_bit)(loss_before, loss_after)
+    b_new = update_b(b, bits, cfg.bctrl)
+    new_state = RoundState(
+        w_global=w_global_new,
+        w_locals=w_locals.at[sel].set(w_new),
+        b=b_new,
+        residuals=residuals.at[sel].set(res_new),
+    )
+    metrics = {
+        "loss": jnp.mean(loss_after),
+        "b": b_new.b,
+        "theta_mse": jnp.mean((theta - jnp.mean(deltas_att, axis=0)) ** 2),
+    }
+    return new_state, metrics
+
+
+def evaluate(ctx: RoundContext, w_global: jax.Array) -> jax.Array:
+    """Test accuracy of the flat global model (jittable)."""
+    return ctx.acc_fn(ctx.unravel(w_global), ctx.test)
+
+
+def run_rounds(
+    ctx: RoundContext,
+    params: CellParams,
+    key: jax.Array,
+    state: RoundState,
+    rounds: int | None = None,
+    *,
+    with_acc: bool = True,
+) -> tuple[RoundState, dict]:
+    """Run ``rounds`` FL rounds under ``lax.scan``.
+
+    Follows the exact per-round key schedule of ``FLSimulation.run``
+    (``key, kb, kr = split(key, 3)``; batches from ``kb``, round from
+    ``kr``), so at a fixed seed this reproduces the sequential driver.
+    Returns the final state and the metrics trajectory (each metric is a
+    ``(rounds,)`` array; ``acc`` included when ``with_acc``).
+    """
+    rounds = rounds or ctx.cfg.rounds
+
+    def body(carry, _):
+        key, state = carry
+        key, kb, kr = jax.random.split(key, 3)
+        batches = round_batches(ctx, kb)
+        state, m = fl_round(ctx, params, kr, state, batches)
+        if with_acc:
+            m = dict(m, acc=evaluate(ctx, state.w_global))
+        return (key, state), m
+
+    (_, final_state), traj = jax.lax.scan(body, (key, state), None, length=rounds)
+    return final_state, traj

@@ -4,7 +4,10 @@ One round (jit-compiled, clients vmapped):
   1. every client trains its *personal* model from its previous local
      parameters, prox-regularized toward the current global model (Eq. 4);
   2. model differences ``delta^m = w_local^m - w_global`` are formed;
-  3. Byzantine clients replace their delta per the configured attack;
+  3. Byzantine clients replace their delta per the configured attack
+     (delta-level attacks from :data:`repro.core.ATTACKS`; the ``bit_flip``
+     wire adversary instead inverts post-quantization codes inside the
+     pipeline);
   4. the configured :class:`repro.core.AggregatorPipeline` (resolved once
      from the registry — no aggregator branching here) compresses the
      updates onto the packed one-bit wire and estimates theta_hat —
@@ -13,6 +16,13 @@ One round (jit-compiled, clients vmapped):
      RSA ride the same registry;
   5. the global model steps by ``theta_hat``; the dynamic-b controller
      majority-votes the clients' one-bit loss signals (§VI-B).
+
+The round itself lives in :mod:`repro.fl.rounds` as a pure
+``RoundState -> RoundState`` function; :class:`FLSimulation` is the thin
+stateful driver (host loop + periodic eval) kept for the original
+experiment API. Whole scenario *grids* — many (aggregator, attack,
+byz_frac, M, seed) cells at once — run through the vmapped campaign
+engine in :mod:`repro.sim` instead.
 """
 
 from __future__ import annotations
@@ -22,22 +32,10 @@ import functools
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.flatten_util import ravel_pytree
 
-from ..core import (
-    ATTACKS,
-    BControlConfig,
-    DPConfig,
-    available_aggregators,
-    build_pipeline,
-    get_attack,
-    init_b_state,
-    loss_bit,
-    update_b,
-)
-from ..optim import local_prox_train
+from ..core import ATTACKS, BControlConfig, DPConfig, available_aggregators, build_pipeline
+from . import rounds as _rounds
 
 _B_MODES = ("dynamic", "fixed", "oracle")
 
@@ -132,7 +130,15 @@ class FLConfig:
 
 
 class FLSimulation:
-    """Simulation-mode FL (CPU): the paper-faithful experiment harness."""
+    """Simulation-mode FL (CPU): the paper-faithful experiment harness.
+
+    A thin stateful wrapper over the pure round core in
+    :mod:`repro.fl.rounds` — it owns a :class:`~repro.fl.rounds.RoundState`
+    and drives one jitted round per loop iteration, evaluating on the host
+    every ``eval_every`` rounds. The per-round math, RNG schedule, and
+    therefore the trajectories are identical to the campaign engine's
+    scanned execution of the same config.
+    """
 
     def __init__(
         self,
@@ -145,80 +151,70 @@ class FLSimulation:
         test: dict,
     ):
         self.cfg = cfg
-        w0, self.unravel = ravel_pytree(init_params)
-        self.w_global = w0
-        self.w_locals = jnp.tile(w0[None], (cfg.n_clients, 1))
-        self.residuals = jnp.zeros((cfg.n_clients, w0.shape[0]), jnp.float32)
-        self.b_state = init_b_state(cfg.bctrl)
-        self.loss_fn = loss_fn
-        self.acc_fn = acc_fn
-        self.client_x = jnp.asarray(client_x)
-        self.client_y = jnp.asarray(client_y)
-        self.test = {k: jnp.asarray(v) for k, v in test.items()}
-        self.d = w0.shape[0]
-        # All aggregator-specific behavior lives in this pipeline object —
-        # the runtime only orchestrates local training and state updates.
-        self.pipeline = cfg.pipeline()
-        self._round = jax.jit(self._round_impl)
+        self.ctx = _rounds.make_context(
+            cfg, init_params, loss_fn, acc_fn, client_x, client_y, test
+        )
+        self.state = _rounds.init_state(self.ctx)
+        self._params = _rounds.cell_params(cfg)
+        self._round = jax.jit(
+            functools.partial(_rounds.fl_round, self.ctx, self._params)
+        )
         self.history: list[dict] = []
+
+    # State views (the arrays live in self.state; these keep the original
+    # attribute API used by tests and examples).
+    @property
+    def w_global(self):
+        return self.state.w_global
+
+    @property
+    def w_locals(self):
+        return self.state.w_locals
+
+    @property
+    def b_state(self):
+        return self.state.b
+
+    @property
+    def residuals(self):
+        return self.state.residuals
+
+    @property
+    def unravel(self):
+        return self.ctx.unravel
+
+    @property
+    def loss_fn(self):
+        return self.ctx.loss_fn
+
+    @property
+    def acc_fn(self):
+        return self.ctx.acc_fn
+
+    @property
+    def client_x(self):
+        return self.ctx.client_x
+
+    @property
+    def client_y(self):
+        return self.ctx.client_y
+
+    @property
+    def test(self):
+        return self.ctx.test
+
+    @property
+    def pipeline(self):
+        return self.ctx.pipeline
+
+    @property
+    def d(self) -> int:
+        return self.ctx.d
 
     # -- data --------------------------------------------------------------
 
     def _round_batches(self, key):
-        cfg = self.cfg
-        per_client = self.client_x.shape[1]
-        steps = max(cfg.local_epochs * per_client // cfg.batch_size, 1)
-        idx = jax.random.randint(
-            key, (cfg.n_clients, steps, cfg.batch_size), 0, per_client
-        )
-        bx = jax.vmap(lambda x, i: x[i])(self.client_x, idx)
-        by = jax.vmap(lambda y, i: y[i])(self.client_y, idx)
-        return {"x": bx, "y": by}
-
-    # -- one round ----------------------------------------------------------
-
-    def _round_impl(self, key, w_global, w_locals, b, batches, residuals):
-        cfg = self.cfg
-        if cfg.participation < 1.0:
-            sel = jax.random.choice(
-                jax.random.fold_in(key, 99), cfg.n_clients,
-                (cfg.n_active,), replace=False,
-            )
-        else:
-            sel = jnp.arange(cfg.n_clients)
-        w_sel = w_locals[sel]
-        res_sel = residuals[sel]
-        batches = jax.tree.map(lambda a: a[sel], batches)
-
-        def client(w_local, cb, ck):
-            return local_prox_train(
-                self.loss_fn,
-                w_global,
-                w_local,
-                self.unravel,
-                cb,
-                lr=cfg.lr,
-                mu=cfg.momentum,
-                lam=cfg.lam,
-                use_kernel=cfg.use_kernels,
-            )
-
-        ckeys = jax.random.split(key, cfg.n_active)
-        w_new, loss_before, loss_after = jax.vmap(client)(w_sel, batches, ckeys)
-        deltas = w_new - w_global[None]
-
-        k_att, k_q = jax.random.split(jax.random.fold_in(key, 1))
-        n_byz = int(cfg.n_active * cfg.byz_frac)
-        deltas_att = get_attack(cfg.attack)(k_att, deltas, n_byz)
-
-        theta, res_new = self.pipeline(k_q, deltas_att, b.b, res_sel)
-        w_global_new = w_global + theta
-
-        bits = jax.vmap(loss_bit)(loss_before, loss_after)
-        b_new = update_b(b, bits, cfg.bctrl)
-        w_locals_new = w_locals.at[sel].set(w_new)
-        residuals_new = residuals.at[sel].set(res_new)
-        return w_global_new, w_locals_new, b_new, jnp.mean(loss_after), residuals_new
+        return _rounds.round_batches(self.ctx, key)
 
     # -- driver --------------------------------------------------------------
 
@@ -233,23 +229,14 @@ class FLSimulation:
         for t in range(rounds):
             key, kb, kr = jax.random.split(key, 3)
             batches = self._round_batches(kb)
-            (
-                self.w_global,
-                self.w_locals,
-                self.b_state,
-                loss,
-                self.residuals,
-            ) = self._round(
-                kr, self.w_global, self.w_locals, self.b_state, batches,
-                self.residuals,
-            )
+            self.state, metrics = self._round(kr, self.state, batches)
             if (t + 1) % eval_every == 0 or t == rounds - 1:
                 acc = self.evaluate()
                 rec = {
                     "round": t + 1,
                     "acc": acc,
-                    "loss": float(loss),
-                    "b": float(self.b_state.b),
+                    "loss": float(metrics["loss"]),
+                    "b": float(self.state.b.b),
                 }
                 self.history.append(rec)
                 if verbose:

@@ -1,0 +1,28 @@
+"""Scenario-campaign engine: vmapped grids of FL runs with statistics.
+
+Declare a grid with :class:`CampaignSpec` (base FLConfig + cell overrides
++ seeds), execute it with :func:`run_campaign`, and read per-cell
+trajectories with mean ± CI from the returned :class:`CampaignResult`.
+See ``benchmarks/table1_byzantine.py`` for the canonical usage."""
+
+from .campaign import (
+    VMAP_FIELDS,
+    CampaignSpec,
+    CellSpec,
+    Task,
+    group_signature,
+    run_campaign,
+)
+from .metrics import CampaignResult, CellResult, mean_ci
+
+__all__ = [
+    "VMAP_FIELDS",
+    "CampaignSpec",
+    "CellSpec",
+    "Task",
+    "group_signature",
+    "run_campaign",
+    "CampaignResult",
+    "CellResult",
+    "mean_ci",
+]

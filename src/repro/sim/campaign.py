@@ -1,0 +1,251 @@
+"""Vectorized scenario-campaign engine: whole grids as one computation.
+
+A :class:`CampaignSpec` declares a grid of FL scenarios — a base
+:class:`~repro.fl.FLConfig` plus per-cell overrides and a seed list — and
+:func:`run_campaign` executes the entire grid through the functional round
+core (:mod:`repro.fl.rounds`) instead of sequential Python-looped
+:class:`~repro.fl.FLSimulation` runs:
+
+1. Cells are **grouped** by their static trace signature (every FLConfig
+   field that shapes the compiled program: client count, aggregator,
+   participation, DP, b-mode, rounds, ...). One group == one XLA program.
+2. Within a group, the engine **vmaps** over all (cell, seed) pairs at
+   once. Cells may differ in the *traced* scenario fields
+   (:data:`VMAP_FIELDS`): learning rate, momentum, prox weight, b_init,
+   the seed, and the attack — delta-level attacks dispatch through
+   ``lax.switch`` on a traced id, and the ``bit_flip`` wire adversary is a
+   traced gate, so a full attack axis rides a single vmapped batch.
+3. Groups whose shapes or static fields differ (e.g. an M-sweep changing
+   ``n_clients``) **fall back to grouped execution**: one compiled
+   program per group, still scanned over rounds and vmapped over seeds.
+4. With ``shard=True`` and more than one device, the (cell, seed) batch
+   axis is sharded across devices via the ``launch/mesh`` utilities —
+   campaign cells are embarrassingly parallel.
+
+At a fixed seed each cell reproduces ``FLSimulation`` exactly (same RNG
+schedule, same per-round math — see ``tests/test_campaign.py``), so grids
+previously run as benchmark loops are drop-in replaceable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import is_wire_attack
+from ..fl import FLConfig
+from ..fl import rounds as R
+from .metrics import CampaignResult, CellResult
+
+__all__ = [
+    "VMAP_FIELDS",
+    "Task",
+    "CellSpec",
+    "CampaignSpec",
+    "group_signature",
+    "run_campaign",
+]
+
+# FLConfig fields that enter the compiled program only as traced values —
+# cells differing solely in these (plus the seed) share one vmapped trace.
+VMAP_FIELDS = frozenset({"lr", "momentum", "lam", "b_init", "attack", "seed"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """The learning task a campaign cell runs on (data + model + metrics)."""
+
+    init_params: Any
+    loss_fn: Callable
+    acc_fn: Callable
+    client_x: Any  # (n_clients, per_client, ...)
+    client_y: Any  # (n_clients, per_client)
+    test: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One scenario cell: a name plus FLConfig field overrides."""
+
+    name: str
+    overrides: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """A scenario grid: base config, cells, seeds.
+
+    ``base`` holds FLConfig kwargs shared by every cell; each cell's
+    overrides are applied on top. ``seeds`` drive the training RNG
+    (``FLConfig.seed`` in base/overrides is ignored — the campaign owns
+    the seed axis).
+    """
+
+    base: Mapping[str, Any]
+    cells: tuple[CellSpec, ...]
+    seeds: tuple[int, ...] = (0,)
+
+    def config(self, cell: CellSpec) -> FLConfig:
+        return FLConfig(**{**dict(self.base), **dict(cell.overrides)})
+
+    def configs(self) -> list[FLConfig]:
+        return [self.config(c) for c in self.cells]
+
+    @staticmethod
+    def from_grid(
+        base: Mapping[str, Any],
+        axes: Mapping[str, Sequence[Any]],
+        seeds: Sequence[int] = (0,),
+    ) -> "CampaignSpec":
+        """Cartesian product over ``axes`` (dict field -> values).
+
+        Cell names are ``field=value`` pairs joined with ``|`` in axis
+        order, e.g. ``attack=gaussian|aggregator=rsa``.
+        """
+        names = list(axes)
+        cells = []
+        for combo in itertools.product(*(axes[n] for n in names)):
+            overrides = dict(zip(names, combo))
+            cells.append(
+                CellSpec("|".join(f"{k}={v}" for k, v in overrides.items()), overrides)
+            )
+        return CampaignSpec(base=dict(base), cells=tuple(cells), seeds=tuple(seeds))
+
+
+def group_signature(cfg: FLConfig) -> tuple:
+    """The static trace signature — cells sharing it share one program."""
+    return tuple(
+        getattr(cfg, f.name)
+        for f in dataclasses.fields(FLConfig)
+        if f.name not in VMAP_FIELDS
+    )
+
+
+def _batched_inputs(ctx, cfgs: list[FLConfig], seeds: Sequence[int]):
+    """Stack per-(cell, seed) CellParams, PRNG keys, and initial states."""
+    elems = [(cfg, s) for cfg in cfgs for s in seeds]
+    params = R.CellParams(
+        lr=jnp.asarray([c.lr for c, _ in elems], jnp.float32),
+        momentum=jnp.asarray([c.momentum for c, _ in elems], jnp.float32),
+        lam=jnp.asarray([c.lam for c, _ in elems], jnp.float32),
+        attack_id=jnp.asarray(
+            [R.cell_params(c).attack_id for c, _ in elems], jnp.int32
+        ),
+        flip_gate=jnp.asarray(
+            [is_wire_attack(c.attack) for c, _ in elems], jnp.bool_
+        ),
+    )
+    keys = jnp.stack([jax.random.PRNGKey(s) for _, s in elems])
+    b_inits = jnp.asarray([c.b_init for c, _ in elems], jnp.float32)
+    states = jax.vmap(lambda b0: R.init_state(ctx, b0))(b_inits)
+    return params, keys, states
+
+
+def _shard_over_devices(trees, n: int):
+    """Shard the leading (cell, seed) axis over all local devices.
+
+    Returns (possibly padded) trees plus the padded size; a no-op on a
+    single device. Padding repeats the last element — padded results are
+    sliced away by the caller.
+    """
+    devices = jax.devices()
+    if len(devices) <= 1:
+        return trees, n
+    from ..launch.mesh import make_mesh
+
+    n_dev = len(devices)
+    n_pad = ((n + n_dev - 1) // n_dev) * n_dev
+    mesh = make_mesh((n_dev,), ("data",))
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data")
+    )
+
+    def pad_leaf(x):
+        if n_pad > n:
+            x = jnp.concatenate([x, jnp.repeat(x[-1:], n_pad - n, axis=0)])
+        return jax.device_put(x, sharding)
+
+    return jax.tree.map(pad_leaf, trees), n_pad
+
+
+def run_campaign(
+    spec: CampaignSpec,
+    task_fn: Callable[[FLConfig], Task],
+    *,
+    shard: bool = False,
+    with_acc: bool = True,
+    verbose: bool = False,
+) -> CampaignResult:
+    """Execute a campaign grid; returns per-cell trajectories + timings.
+
+    ``task_fn(cfg)`` supplies the task for a cell's config (called once
+    per group with a representative config — memoize inside if building
+    data is expensive). Group wall-clock includes compilation: that is the
+    honest comparison against sequential drivers, which also jit per run.
+    """
+    cfgs = spec.configs()
+    groups: dict[tuple, list[int]] = {}
+    for i, cfg in enumerate(cfgs):
+        groups.setdefault(group_signature(cfg), []).append(i)
+
+    t_start = time.perf_counter()
+    cell_results: dict[int, CellResult] = {}
+    group_stats: list[dict] = []
+    for idxs in groups.values():
+        group_cfgs = [cfgs[i] for i in idxs]
+        cfg0 = group_cfgs[0]
+        task = task_fn(cfg0)
+        wire_flip = any(is_wire_attack(c.attack) for c in group_cfgs)
+        ctx = R.make_context(
+            cfg0,
+            task.init_params,
+            task.loss_fn,
+            task.acc_fn,
+            task.client_x,
+            task.client_y,
+            task.test,
+            wire_flip=wire_flip,
+        )
+        params, keys, states = _batched_inputs(ctx, group_cfgs, spec.seeds)
+        n = len(group_cfgs) * len(spec.seeds)
+        if shard:
+            (params, keys, states), _ = _shard_over_devices((params, keys, states), n)
+
+        runner = jax.jit(
+            jax.vmap(lambda p, k, s: R.run_rounds(ctx, p, k, s, with_acc=with_acc)[1])
+        )
+        t0 = time.perf_counter()
+        traj = jax.block_until_ready(runner(params, keys, states))
+        wall = time.perf_counter() - t0
+
+        traj = {m: np.asarray(v)[:n] for m, v in traj.items()}
+        n_seeds = len(spec.seeds)
+        for j, i in enumerate(idxs):
+            cell_results[i] = CellResult(
+                name=spec.cells[i].name,
+                overrides=dict(spec.cells[i].overrides),
+                metrics={
+                    m: v[j * n_seeds : (j + 1) * n_seeds] for m, v in traj.items()
+                },
+            )
+        group_stats.append(
+            {"cells": [spec.cells[i].name for i in idxs], "wall_s": wall}
+        )
+        if verbose:
+            print(
+                f"[campaign] group of {len(idxs)} cells x {n_seeds} seeds: "
+                f"{wall:.2f}s ({', '.join(spec.cells[i].name for i in idxs)})"
+            )
+
+    return CampaignResult(
+        cells=[cell_results[i] for i in range(len(cfgs))],
+        seeds=spec.seeds,
+        groups=group_stats,
+        wall_s=time.perf_counter() - t_start,
+    )

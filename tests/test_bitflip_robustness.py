@@ -1,0 +1,126 @@
+"""The ``bit_flip`` wire adversary as a first-class attack (paper §VI-D).
+
+``bit_flip`` inverts Byzantine clients' *post-quantization* codes directly
+on the packed wire — the strongest bit-level adversary, the one Theorem 2
+actually bounds. These tests pin down the paper's robustness comparison
+at the aggregation level, where the claims are exact:
+
+* PRoBit+ degrades **gracefully**: the expected-estimate deviation obeys
+  the Theorem-2 line (per-coordinate ``<= 2 beta b``) and grows linearly
+  in beta, smoothly *through* the beta = 1/2 majority threshold.
+* signSGD-MV **breaks first**: below the threshold the majority vote
+  hides the attack entirely (zero deviation — no warning), and crossing
+  it flips the vote to the full ``2 * step`` dynamic range on every
+  coordinate — maximal wrong-direction steps, a phase transition rather
+  than degradation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_pipeline, flip_codes
+from repro.core.aggregation import PackedWire, _unpack_rows
+
+M, D = 40, 128
+B = 0.05
+STEP = 0.01
+REPS = 400
+KEY = jax.random.PRNGKey(0)
+BETAS = (0.2, 0.45, 0.6)
+
+
+@pytest.fixture(scope="module")
+def updates():
+    """Heterogeneous updates with strong per-coordinate signal |mean| = b/2
+    (so clean signSGD-MV votes are near-certain and any breakage is the
+    attack's doing, not vote noise)."""
+    signs = jnp.where(jax.random.bernoulli(KEY, 0.5, (D,)), 1.0, -1.0)
+    theta = 0.5 * B * signs
+    noise = 0.15 * B * jax.random.normal(jax.random.fold_in(KEY, 1), (M, D))
+    return theta, theta + noise
+
+
+def _mean_estimate(pipe, upd, beta):
+    """E[theta_hat] over the quantizer randomness at flip fraction beta."""
+    n = int(M * beta)
+    res0 = jnp.zeros((M, D))
+    keys = jax.random.split(jax.random.fold_in(KEY, 2), REPS)
+    f = jax.jit(
+        jax.vmap(
+            lambda k: pipe(k, upd, jnp.float32(B), res0, flip_n=n, flip_gate=True)[0]
+        )
+    )
+    return jnp.mean(f(keys), axis=0)
+
+
+def test_wire_flip_equals_dense_flip_codes(updates):
+    """The packed-wire bit inversion is exactly flip_codes on the codes."""
+    _, upd = updates
+    pipe = build_pipeline("probit_plus")
+    n = M // 4
+    wire, _ = pipe.compressor.compress(KEY, upd, jnp.float32(B), jnp.zeros((M, D)))
+    from repro.core import flip_wire
+
+    flipped = flip_wire(wire, n)
+    assert isinstance(flipped, PackedWire)
+    codes = _unpack_rows(wire.packed, D)
+    codes_flipped = _unpack_rows(flipped.packed, D)
+    np.testing.assert_array_equal(
+        np.asarray(codes_flipped), np.asarray(flip_codes(codes, n))
+    )
+
+
+def test_probit_degrades_gracefully(updates):
+    """Deviation stays on the Theorem-2 line: <= 2 beta b per coordinate,
+    ~linear in beta, no discontinuity at the beta = 1/2 threshold."""
+    _, upd = updates
+    pipe = build_pipeline("probit_plus")
+    clean = _mean_estimate(pipe, upd, 0.0)
+    devs = {}
+    for beta in BETAS:
+        att = _mean_estimate(pipe, upd, beta)
+        devs[beta] = float(jnp.max(jnp.abs(att - clean)))
+        assert devs[beta] <= 2 * beta * B * 1.05, (beta, devs[beta])
+    # linear growth (beta ratio 3 between the endpoints), smooth across 1/2
+    assert devs[0.2] < devs[0.45] < devs[0.6]
+    assert 2.0 <= devs[0.6] / devs[0.2] <= 3.3
+    assert devs[0.6] / devs[0.45] <= 1.6  # no phase transition at 1/2
+
+
+def test_signsgd_mv_breaks_at_majority_threshold(updates):
+    """Majority voting hides the attack below 1/2 (zero deviation), then
+    reverses every coordinate at full step amplitude above it."""
+    theta, upd = updates
+    pipe = build_pipeline("signsgd_mv", agg_step=STEP)
+    clean = _mean_estimate(pipe, upd, 0.0)
+    dev_pre = float(jnp.max(jnp.abs(_mean_estimate(pipe, upd, 0.45) - clean)))
+    att = _mean_estimate(pipe, upd, 0.6)
+    dev_post = float(jnp.max(jnp.abs(att - clean)))
+    wrong = float(jnp.mean(jnp.sign(att) != jnp.sign(theta)))
+    assert dev_pre <= 0.1 * STEP, dev_pre  # silent until the threshold...
+    assert dev_post >= 1.9 * STEP, dev_post  # ...then the full dynamic range
+    assert wrong >= 0.95, wrong  # every coordinate steps the wrong way
+
+
+def test_probit_outlasts_signsgd(updates):
+    """The comparison the paper's Table I makes, in estimate space: past
+    the majority threshold signSGD-MV's error is maximal relative to its
+    own output range (ratio ~1), while PRoBit+'s stays the graceful
+    2-beta-b fraction of its range."""
+    _, upd = updates
+    beta = 0.6
+    probit = build_pipeline("probit_plus")
+    signsgd = build_pipeline("signsgd_mv", agg_step=STEP)
+    rel = {}
+    for name, pipe, full_range in (
+        ("probit", probit, 2 * B),
+        ("signsgd", signsgd, 2 * STEP),
+    ):
+        clean = _mean_estimate(pipe, upd, 0.0)
+        att = _mean_estimate(pipe, upd, beta)
+        rel[name] = float(jnp.max(jnp.abs(att - clean))) / full_range
+    assert rel["signsgd"] >= 0.9  # broken: worst representable output
+    assert rel["probit"] <= beta * 1.05  # graceful: the 2*beta*b / 2b line
+    assert rel["probit"] < rel["signsgd"]

@@ -1,0 +1,131 @@
+"""Campaign engine tests: grouping, vmapped execution, sequential parity.
+
+The load-bearing test here is the 1e-6 parity between a campaign grid and
+the sequential ``FLSimulation`` driver at fixed seeds — the guarantee that
+lets the benchmark grids (``benchmarks/table1_byzantine.py`` etc.) run
+through the engine without changing their numbers.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import make_classification, partition_label_skew
+from repro.fl import FLConfig, FLSimulation
+from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
+from repro.sim import CampaignSpec, CellSpec, Task, group_signature, run_campaign
+
+BASE = dict(n_clients=6, rounds=3, local_epochs=1, byz_frac=0.34, b_mode="fixed")
+SEEDS = (0, 1)
+CELLS = (
+    CellSpec("gaussian", {"attack": "gaussian"}),
+    CellSpec("alie", {"attack": "alie"}),
+    CellSpec("bit_flip", {"attack": "bit_flip"}),
+    CellSpec("fedavg_gauss", {"attack": "gaussian", "aggregator": "fedavg"}),
+)
+
+
+@pytest.fixture(scope="module")
+def task():
+    (xtr, ytr), (xte, yte) = make_classification(0, n_train=600, n_test=150)
+    parts = partition_label_skew(ytr, 6, 2, 50, seed=1)
+    cx = np.stack([xtr[i] for i in parts])
+    cy = np.stack([ytr[i] for i in parts])
+    p0 = init_mlp(jax.random.PRNGKey(0), hidden=8)
+    return Task(
+        init_params=p0,
+        loss_fn=functools.partial(xent_loss, mlp_logits),
+        acc_fn=functools.partial(accuracy, mlp_logits),
+        client_x=cx,
+        client_y=cy,
+        test={"x": xte, "y": yte},
+    )
+
+
+@pytest.fixture(scope="module")
+def result(task):
+    spec = CampaignSpec(base=BASE, cells=CELLS, seeds=SEEDS)
+    return run_campaign(spec, lambda cfg: task)
+
+
+def test_attack_axis_shares_one_group(result):
+    """Cells differing only in the attack (incl. the bit_flip wire
+    adversary) ride one vmapped program; the fedavg cell is its own."""
+    groups = sorted([sorted(g["cells"]) for g in result.groups])
+    assert groups == [["alie", "bit_flip", "gaussian"], ["fedavg_gauss"]]
+
+
+def test_group_signature_splits_static_fields():
+    sig = lambda **kw: group_signature(FLConfig(**{**BASE, **kw}))
+    assert sig(attack="gaussian") == sig(attack="bit_flip", lr=0.05, seed=3)
+    assert sig() != sig(aggregator="fedavg")
+    assert sig() != sig(n_clients=8)
+    assert sig() != sig(dp_epsilon=0.1)
+
+
+def test_campaign_matches_sequential_driver(task, result):
+    """Acceptance: per-cell, per-seed, per-round accuracies from the
+    vmapped grid equal the sequential FLSimulation loop within 1e-6."""
+    for cell in CELLS:
+        for si, seed in enumerate(SEEDS):
+            cfg = FLConfig(seed=seed, **{**BASE, **cell.overrides})
+            sim = FLSimulation(
+                cfg, task.init_params, task.loss_fn, task.acc_fn,
+                task.client_x, task.client_y, task.test,
+            )
+            sim.run(eval_every=1)
+            seq_acc = np.asarray([h["acc"] for h in sim.history])
+            seq_loss = np.asarray([h["loss"] for h in sim.history])
+            cam = result.cell(cell.name)
+            np.testing.assert_allclose(
+                cam.metrics["acc"][si], seq_acc, atol=1e-6, err_msg=cell.name
+            )
+            np.testing.assert_allclose(
+                cam.metrics["loss"][si], seq_loss, rtol=1e-6, err_msg=cell.name
+            )
+
+
+def test_theta_mse_metric_recorded(result):
+    """theta_mse (aggregation error vs the uploaded updates' true mean) is
+    finite for every cell and exactly zero for exact-mean FedAvg."""
+    for cell in result.cells:
+        mse = cell.metrics["theta_mse"]
+        assert np.all(np.isfinite(mse)), cell.name
+    assert np.all(result.cell("fedavg_gauss").metrics["theta_mse"] == 0.0)
+    assert np.all(result.cell("gaussian").metrics["theta_mse"] > 0.0)
+
+
+def test_summary_statistics_shapes(result):
+    cell = result.cell("gaussian")
+    assert cell.metrics["acc"].shape == (len(SEEDS), BASE["rounds"])
+    mean, half = cell.trajectory("acc")
+    assert mean.shape == (BASE["rounds"],) and half.shape == (BASE["rounds"],)
+    final_mean, final_half = cell.final("acc")
+    assert 0.0 <= final_mean <= 1.0 and final_half >= 0.0
+    js = result.to_json()
+    assert set(js["cells"]) == {c.name for c in CELLS}
+
+
+def test_from_grid_cartesian():
+    spec = CampaignSpec.from_grid(
+        BASE, {"attack": ["gaussian", "alie"], "lr": [0.01, 0.02]}, seeds=(0,)
+    )
+    assert [c.name for c in spec.cells] == [
+        "attack=gaussian|lr=0.01",
+        "attack=gaussian|lr=0.02",
+        "attack=alie|lr=0.01",
+        "attack=alie|lr=0.02",
+    ]
+    # lr rides the vmap axis: one signature for all four cells
+    assert len({group_signature(c) for c in spec.configs()}) == 1
+
+
+def test_sharded_execution_runs(task):
+    """shard=True is a no-op on one device but must execute end-to-end."""
+    spec = CampaignSpec(
+        base=BASE, cells=(CellSpec("g", {"attack": "gaussian"}),), seeds=(0,)
+    )
+    res = run_campaign(spec, lambda cfg: task, shard=True)
+    assert res.cell("g").metrics["acc"].shape == (1, BASE["rounds"])

@@ -108,6 +108,49 @@ def test_long500k_window_plan():
     assert cache_plan(q, SHAPES["decode_32k"]) == (32_768, 0)
 
 
+def test_unsampled_residuals_untouched():
+    """Partial participation + error feedback: a round must update the EF
+    residuals of exactly the sampled clients and leave every unsampled
+    row bit-identical — guards the ``residuals.at[sel].set`` bookkeeping
+    in the round core."""
+    from repro.fl import rounds as R
+
+    (xtr, ytr), (xte, yte) = make_classification(0, n_train=1000, n_test=200)
+    parts = partition_label_skew(ytr, 8, 2, 50, seed=1)
+    cx = np.stack([xtr[i] for i in parts])
+    cy = np.stack([ytr[i] for i in parts])
+    p0 = init_mlp(jax.random.PRNGKey(0), hidden=16)
+    cfg = FLConfig(
+        n_clients=8, participation=0.5, error_feedback=True,
+        aggregator="probit_plus", rounds=2, local_epochs=1,
+    )
+    ctx = R.make_context(
+        cfg, p0,
+        functools.partial(xent_loss, mlp_logits),
+        functools.partial(accuracy, mlp_logits),
+        cx, cy, {"x": xte, "y": yte},
+    )
+    params = R.cell_params(cfg)
+    state = R.init_state(ctx)
+    key = jax.random.PRNGKey(cfg.seed)
+    for _ in range(2):
+        key, kb, kr = jax.random.split(key, 3)
+        prev = np.asarray(state.residuals)
+        state, _ = R.fl_round(ctx, params, kr, state, R.round_batches(ctx, kb))
+        # recompute the round's participation sample with its exact key
+        sel = np.asarray(
+            jax.random.choice(
+                jax.random.fold_in(kr, 99), cfg.n_clients,
+                (cfg.n_active,), replace=False,
+            )
+        )
+        unsampled = np.setdiff1d(np.arange(cfg.n_clients), sel)
+        after = np.asarray(state.residuals)
+        np.testing.assert_array_equal(after[unsampled], prev[unsampled])
+        # sampled clients quantized something, so their residuals moved
+        assert np.all(np.any(after[sel] != prev[sel], axis=1)), sel
+
+
 def test_partial_participation():
     """Cross-device sampling: only a fraction of clients trains per round;
     the global model still learns and unsampled locals are untouched."""
