@@ -1,0 +1,71 @@
+"""Beyond-paper figure: buffered-async PRoBit+ under timing adversaries.
+
+Sweeps the three knobs the paper's synchronous analysis cannot express —
+server buffer size x staleness-decay x Byzantine fraction — under the
+``straggler+sign_flip`` composite adversary (Byzantine clients upload a
+sign-flipped delta AND withhold it so it sits in the buffer at maximal
+staleness). The whole sweep is one ``CampaignSpec``: the staleness-decay
+axis is traced (one vmapped program per (buffer, byz_frac) signature
+group), so the grid compiles ``len(BUFFERS) * len(BYZ_FRACS)`` programs
+for ``len(BUFFERS) * len(DECAYS) * len(BYZ_FRACS)`` cells.
+
+Reads on the output: with decay 0 a withheld Byzantine vote keeps full
+weight forever (theta-MSE grows with byz_frac); raising the decay
+discounts exactly those frozen votes, which is the defense the
+``tests/test_async_rounds.py`` regression pins down.
+
+``main`` writes the campaign JSON artifact to
+``reports/fig_async_staleness.json`` (the CI ``slow`` job uploads it next
+to the statistical-suite artifacts) and emits per-cell summary rows.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .common import ROUNDS, campaign_task, emit  # sets sys.path first
+
+from repro.sim import CampaignSpec, run_campaign  # noqa: E402
+
+N_CLIENTS = 10
+BUFFERS = (5, 10)
+DECAYS = (0.0, 0.5, 1.0)
+BYZ_FRACS = (0.0, 0.1, 0.3)
+LATENCY = 1.0
+
+
+def fig_async_spec(rounds: int | None = None, seeds=(0, 1, 2)) -> CampaignSpec:
+    """The buffer x decay x byz_frac straggler sweep as one campaign."""
+    return CampaignSpec.from_grid(
+        base=dict(
+            n_clients=N_CLIENTS,
+            rounds=rounds or ROUNDS,
+            local_epochs=2,
+            attack="straggler+sign_flip",
+            async_latency=LATENCY,
+            b_mode="fixed",
+        ),
+        axes={
+            "async_buffer": BUFFERS,
+            "staleness_decay": DECAYS,
+            "byz_frac": BYZ_FRACS,
+        },
+        seeds=seeds,
+    )
+
+
+def main(rounds: int | None = None, out: str | None = None) -> dict:
+    spec = fig_async_spec(rounds)
+    result = run_campaign(spec, campaign_task, with_acc=True)
+    for name, us, derived in result.emit_rows("fig_async"):
+        emit(name, us, derived)
+    path = out or os.path.join(
+        os.path.dirname(__file__), "..", "reports", "fig_async_staleness.json"
+    )
+    result.save(path)
+    emit("fig_async_artifact", result.wall_s * 1e6, path)
+    return result.final("acc")
+
+
+if __name__ == "__main__":
+    main()

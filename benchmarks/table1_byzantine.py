@@ -1,9 +1,12 @@
 """Paper Table I / Figs. 5-8: test accuracy under each Byzantine attack at
 10% malicious clients, across all aggregation methods (b fixed at 0.01 as
-in the paper's Byzantine section).
+in the paper's Byzantine section) — plus a beyond-paper buffered-async
+PRoBit+ column (clients arrive with mean latency 1 round, staleness
+discount ``1/sqrt(1+age)``), which shows how much of the synchronous
+robustness survives realistic arrivals.
 
 The grid runs through the campaign engine as one ``CampaignSpec``: the
-4 attacks x 6 methods become 24 cells; cells differing only in the attack
+4 attacks x 7 methods become 28 cells; cells differing only in the attack
 share a vmapped program (the attack axis is a traced ``lax.switch`` id),
 so the engine compiles one program per *method* instead of one per cell::
 
@@ -29,6 +32,15 @@ ATTACKS = ("gaussian", "sign_flip", "zero_gradient", "sample_duplicate")
 METHODS = (
     ("probit_plus", {}),
     ("probit_plus_dp", {"aggregator": "probit_plus", "dp_epsilon": 0.1}),
+    (
+        "probit_plus_async",
+        {
+            "aggregator": "probit_plus",
+            "async_buffer": 10,
+            "async_latency": 1.0,
+            "staleness_decay": 0.5,
+        },
+    ),
     ("rsa", {"aggregator": "rsa"}),
     ("signsgd_mv", {"aggregator": "signsgd_mv"}),
     ("fed_gm", {"aggregator": "fed_gm"}),
@@ -37,7 +49,7 @@ METHODS = (
 
 
 def table1_spec(rounds: int | None = None, byz_frac: float = 0.1) -> CampaignSpec:
-    """The Table-I grid as a campaign declaration (24 cells, 1 seed)."""
+    """The Table-I grid as a campaign declaration (28 cells, 1 seed)."""
     cells = []
     for attack in ATTACKS:
         for name, kw in METHODS:

@@ -65,12 +65,15 @@ from .quantizer import (
     packed_counts,
     packed_residuals,
     packed_sign_batch,
+    packed_weighted_counts,
+    padded_dim,
     stochastic_binarize,
     binarize_prob,
 )
 
 __all__ = [
     "ml_estimate_from_counts",
+    "staleness_weights",
     "probit_plus_aggregate",
     "probit_plus_from_updates",
     "fedavg_aggregate",
@@ -101,6 +104,26 @@ def ml_estimate_from_counts(counts: jax.Array, m: int, b: jax.Array) -> jax.Arra
     return (2.0 * counts.astype(jnp.float32) - m) / m * b
 
 
+def staleness_weights(
+    ages: jax.Array, decay: jax.Array, valid: jax.Array | None = None
+) -> jax.Array:
+    """Polynomial staleness discount ``w(age) = (1 + age) ** (-decay)``.
+
+    The weight an asynchronous server gives a buffered upload that is
+    ``age`` rounds old (FedBuff-style; ``decay = 0.5`` is the classical
+    ``1/sqrt(1+age)`` discount). Properties the async suite asserts:
+    non-negative, monotone non-increasing in ``age`` for ``decay >= 0``,
+    and exactly uniform (all ones) at ``decay = 0`` — which is what makes
+    the zero-latency async round reduce to the synchronous one. ``valid``
+    masks empty buffer slots to weight zero. Weights are normalized by
+    their sum inside the weighted estimate, not here.
+    """
+    w = (1.0 + ages.astype(jnp.float32)) ** (-decay)
+    if valid is not None:
+        w = jnp.where(valid, w, 0.0)
+    return w
+
+
 def probit_plus_aggregate(codes: jax.Array, b: jax.Array) -> jax.Array:
     """Aggregate client one-bit codes ``(M, d)`` into ``theta_hat (d,)``."""
     m = codes.shape[0]
@@ -120,26 +143,50 @@ def probit_plus_from_updates(
 # Full-precision baselines
 # ---------------------------------------------------------------------------
 
-def fedavg_aggregate(updates: jax.Array) -> jax.Array:
-    """FedAvg: plain mean of the (M, d) client updates."""
-    return jnp.mean(updates, axis=0)
+def fedavg_aggregate(
+    updates: jax.Array, weights: jax.Array | None = None
+) -> jax.Array:
+    """FedAvg: (weighted) mean of the (M, d) client updates.
+
+    ``weights`` is the staleness weighting of the buffered-async server.
+    The weighted mean is computed as ``mean(u * w * (M / sum(w)))`` rather
+    than ``sum(u * w) / sum(w)``: with unit weights the rescale is exactly
+    1.0 and the call lowers to the *identical* op sequence as the
+    unweighted ``jnp.mean`` (whose division XLA folds into a reciprocal
+    multiply), which the async zero-latency parity test requires bit for
+    bit.
+    """
+    if weights is None:
+        return jnp.mean(updates, axis=0)
+    wsum = jnp.sum(weights)
+    scale = updates.shape[0] / jnp.maximum(wsum, 1e-12)
+    mean = jnp.mean(updates * (weights * scale)[:, None], axis=0)
+    return jnp.where(wsum > 0, mean, 0.0)
 
 
 def geometric_median(
-    updates: jax.Array, iters: int = 16, eps: float = 1e-8
+    updates: jax.Array,
+    iters: int = 16,
+    eps: float = 1e-8,
+    weights: jax.Array | None = None,
 ) -> jax.Array:
     """Fed-GM [Yin et al. 2018]: geometric median via Weiszfeld iterations.
 
     Smoothed Weiszfeld: weights ``1/max(||u_m - y||, eps)``; ``iters`` fixed
     steps under ``lax.fori_loop`` (convergence is geometric; 16 suffices for
-    aggregation noise levels in the paper's regime).
+    aggregation noise levels in the paper's regime). Optional ``weights``
+    compute the *weighted* geometric median (staleness-discounted async
+    buffers): each Weiszfeld weight is scaled by the row weight, so
+    zero-weight (empty/evicted) rows drop out of the fixed point.
     """
-    y0 = jnp.mean(updates, axis=0)
+    y0 = fedavg_aggregate(updates, weights)
 
     def body(_, y):
         dist = jnp.sqrt(jnp.sum((updates - y) ** 2, axis=-1) + eps)
-        w = 1.0 / dist
-        return jnp.sum(updates * w[:, None], axis=0) / jnp.sum(w)
+        w = 1.0 / dist if weights is None else weights / dist
+        return jnp.sum(updates * w[:, None], axis=0) / jnp.maximum(
+            jnp.sum(w), 1e-12
+        )
 
     return jax.lax.fori_loop(0, iters, body, y0)
 
@@ -241,6 +288,23 @@ class ClientCompressor:
     # The Eq.-5 bit probability — shared with the mesh path (fl_step).
     bit_probability = staticmethod(binarize_prob)
 
+    def wire_bytes(self, d: int) -> int | None:
+        """Bytes per packed wire row for dimension ``d`` (None for dense).
+
+        The async round buffer must be allocated before any wire exists;
+        this mirrors the padding the compress path will apply (chunked
+        pure-JAX padding, or the Pallas kernel's 128-byte lane alignment).
+        """
+        if self.mode == "dense":
+            return None
+        # pack_sign always compresses via the chunked packer, so the
+        # kernel alignment applies only to the stochastic kernel wire
+        if self.use_kernels and self.mode == "pack_stochastic":
+            from ..kernels import ops as kops
+
+            return kops.padded_len(d) // 8
+        return padded_dim(d, self.chunk) // 8
+
     def _b_vector(self, eff: jax.Array, b_scalar: jax.Array) -> jax.Array:
         d = eff.shape[1]
         if self.b_mode == "oracle":
@@ -332,23 +396,43 @@ class ServerAggregator:
 
     Bit-based schemes override :meth:`from_counts`; dense schemes override
     :meth:`from_dense`. :meth:`aggregate` dispatches on the wire type.
+
+    ``weights`` (one per wire row) activates the age-weighted path used by
+    the buffered-asynchronous server: the vote counts become
+    ``N_i^w = sum_m w_m 1[c_i^m = +1]`` and the effective cohort size
+    ``M^w = sum_m w_m``, both fed to the *same* per-scheme estimate —
+    Eq. 13 and the signSGD-MV / RSA rules are all affine in ``(N, M)``, so
+    the weighting folds into the counts and the wire format is untouched.
+    With unit weights this is value-identical to the unweighted path.
     """
 
     chunk: int = PACK_CHUNK
 
-    def from_counts(self, counts: jax.Array, m: int, b: jax.Array) -> jax.Array:
+    def from_counts(self, counts: jax.Array, m, b: jax.Array) -> jax.Array:
         raise NotImplementedError
 
-    def from_dense(self, updates: jax.Array) -> jax.Array:
+    def from_dense(
+        self, updates: jax.Array, weights: jax.Array | None = None
+    ) -> jax.Array:
         raise NotImplementedError
 
-    def aggregate(self, wire: Wire) -> jax.Array:
+    def aggregate(
+        self, wire: Wire, weights: jax.Array | None = None
+    ) -> jax.Array:
         if isinstance(wire, DenseWire):
-            return self.from_dense(wire.updates)
+            return self.from_dense(wire.updates, weights)
         if isinstance(wire, SparseWire):
             raise TypeError(f"{type(self).__name__} cannot consume SparseWire")
-        counts = packed_counts(wire.packed, chunk=self.chunk)[: wire.d]
-        return self.from_counts(counts, wire.n_clients, wire.b)
+        if weights is None:
+            counts = packed_counts(wire.packed, chunk=self.chunk)[: wire.d]
+            return self.from_counts(counts, wire.n_clients, wire.b)
+        wcounts = packed_weighted_counts(
+            wire.packed, weights, chunk=self.chunk
+        )[: wire.d]
+        wsum = jnp.sum(weights.astype(jnp.float32))
+        est = self.from_counts(wcounts, jnp.maximum(wsum, 1e-12), wire.b)
+        # An all-empty buffer (round 0 under heavy latency) estimates zero.
+        return jnp.where(wsum > 0, est, 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -360,12 +444,18 @@ class ProBitPlusServer(ServerAggregator):
     def from_counts(self, counts, m, b):
         return ml_estimate_from_counts(counts, m, b)
 
-    def aggregate(self, wire: Wire) -> jax.Array:
+    def aggregate(self, wire: Wire, weights: jax.Array | None = None) -> jax.Array:
         if isinstance(wire, SparseWire):
+            if weights is not None:
+                raise TypeError("weighted aggregation needs a dense PackedWire")
             from .sparse import sparse_aggregate
 
             codes = _unpack_rows(wire.packed, wire.k)
             return sparse_aggregate(wire.indices, codes, wire.b, wire.d)
+        if weights is not None:
+            # The fused count kernel has no weighted variant; the chunked
+            # pure-JAX weighted count consumes the same packed wire.
+            return super().aggregate(wire, weights)
         if self.use_kernels and isinstance(wire, PackedWire):
             from ..kernels import ops as kops
 
@@ -403,16 +493,16 @@ class RSAServer(ServerAggregator):
 
 @dataclasses.dataclass(frozen=True)
 class FedAvgServer(ServerAggregator):
-    def from_dense(self, updates):
-        return fedavg_aggregate(updates)
+    def from_dense(self, updates, weights=None):
+        return fedavg_aggregate(updates, weights)
 
 
 @dataclasses.dataclass(frozen=True)
 class FedGMServer(ServerAggregator):
     iters: int = 16
 
-    def from_dense(self, updates):
-        return geometric_median(updates, self.iters)
+    def from_dense(self, updates, weights=None):
+        return geometric_median(updates, self.iters, weights=weights)
 
 
 # ---------------------------------------------------------------------------
@@ -427,7 +517,7 @@ class AggregatorPipeline:
     compressor: ClientCompressor
     server: ServerAggregator
 
-    def __call__(
+    def compress_wire(
         self,
         key: jax.Array,
         deltas: jax.Array,
@@ -436,8 +526,8 @@ class AggregatorPipeline:
         *,
         flip_n: int = 0,
         flip_gate: jax.Array | None = None,
-    ) -> tuple[jax.Array, jax.Array]:
-        """Full round: compress all clients, aggregate, return (theta, res').
+    ) -> tuple[Wire, jax.Array]:
+        """Client half only: compress all clients onto the wire.
 
         ``flip_n > 0`` arms the ``bit_flip`` wire adversary: the first
         ``flip_n`` clients' codes are inverted *after* compression (see
@@ -446,6 +536,10 @@ class AggregatorPipeline:
         can mix bit_flip cells with delta-level-attack cells. Residuals are
         the honest compressor's (Byzantine rows lie about those too, which
         is exactly what an adversarial client would do under EF).
+
+        Exposed separately from :meth:`estimate` so the asynchronous round
+        can interpose its staleness buffer between compression and the
+        server estimate without reformatting the wire.
         """
         wire, residuals = self.compressor.compress(key, deltas, b_scalar, residuals)
         if flip_n:
@@ -458,7 +552,31 @@ class AggregatorPipeline:
                 wire = jax.tree.map(
                     lambda f, w: jnp.where(flip_gate, f, w), flipped, wire
                 )
-        return self.server.aggregate(wire), residuals
+        return wire, residuals
+
+    def estimate(self, wire: Wire, weights: jax.Array | None = None) -> jax.Array:
+        """Server half only: estimate theta_hat from a (buffered) wire.
+
+        ``weights`` — one non-negative weight per wire row — selects the
+        age-weighted count path (see :class:`ServerAggregator`).
+        """
+        return self.server.aggregate(wire, weights)
+
+    def __call__(
+        self,
+        key: jax.Array,
+        deltas: jax.Array,
+        b_scalar: jax.Array,
+        residuals: jax.Array,
+        *,
+        flip_n: int = 0,
+        flip_gate: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Full synchronous round: compress, aggregate, return (theta, res')."""
+        wire, residuals = self.compress_wire(
+            key, deltas, b_scalar, residuals, flip_n=flip_n, flip_gate=flip_gate
+        )
+        return self.estimate(wire), residuals
 
 
 _PIPELINES: dict[str, Callable[..., AggregatorPipeline]] = {}

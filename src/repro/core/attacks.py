@@ -27,6 +27,21 @@ the first ``n_byz`` clients' *post-quantization* codes on the packed wire
 analogue is row negation. ``flip_codes`` remains the unpacked-codes helper
 used by the Theorem-2 tests.
 
+Buffered-asynchronous rounds add a third adversarial axis — *timing*. The
+``straggler`` adversary withholds Byzantine uploads: a (colluding)
+Byzantine client delivers into the server's staleness buffer only while
+its slot holds no Byzantine upload and then the cohort never refreshes,
+so the poisoned upload sits in the buffer at ever-growing age (and is
+re-delivered to re-poison the slot if a slot-sharing honest client
+evicts it under ``async_buffer < n_active`` contention). Against a uniform staleness weighting (decay 0) that
+frozen vote keeps full weight while honest votes track the moving model —
+the timing analogue of a fixed-point poisoning attack. ``straggler``
+composes with any payload via ``"straggler+<name>"`` (e.g.
+``straggler+sign_flip``, ``straggler+alie``): the payload shapes *what*
+the Byzantine rows upload, straggler shapes *when* it arrives
+(:func:`parse_attack` splits the two stages; the timing gate is traced,
+so straggler and prompt cells share one vmapped campaign program).
+
 ``ATTACK_IDS`` fixes an integer id per delta-level attack so a whole
 scenario axis of attacks can be a *traced* value: :func:`apply_attack`
 dispatches via ``lax.switch``, which is what lets the campaign engine
@@ -46,8 +61,12 @@ __all__ = [
     "ATTACKS",
     "ATTACK_IDS",
     "WIRE_ATTACKS",
+    "TIMING_ATTACKS",
     "attack_id",
     "is_wire_attack",
+    "is_timing_attack",
+    "parse_attack",
+    "available_attacks",
     "apply_attack",
     "flip_codes",
     "flip_wire",
@@ -131,23 +150,71 @@ ATTACKS: dict[str, Callable] = {
 # Attacks that act after quantization, on the wire (see flip_wire).
 WIRE_ATTACKS: frozenset[str] = frozenset({"bit_flip"})
 
+# Attacks on *when* uploads arrive rather than what they contain; only
+# meaningful in buffered-asynchronous rounds (FLConfig.async_buffer > 0).
+TIMING_ATTACKS: frozenset[str] = frozenset({"straggler"})
+
+_TIMING_PREFIX = "straggler+"
+
+
+def parse_attack(name: str) -> tuple[str, bool]:
+    """Split an attack name into ``(payload, straggler)`` stages.
+
+    ``"straggler"`` is a pure timing adversary (payload ``"none"``);
+    ``"straggler+<payload>"`` composes the timing stage with any delta- or
+    wire-level payload from :data:`ATTACKS`. Raises ``ValueError`` on an
+    unknown payload so config validation gets a precise message.
+    """
+    if name in TIMING_ATTACKS:
+        return "none", True
+    if name.startswith(_TIMING_PREFIX):
+        payload = name[len(_TIMING_PREFIX):]
+        if payload == "none" or payload not in ATTACKS:
+            # "straggler+none" is rejected so the accepted grammar matches
+            # available_attacks(); the payload-free spelling is "straggler"
+            raise ValueError(
+                f"unknown straggler payload {payload!r}; "
+                f"available: {tuple(sorted(set(ATTACKS) - {'none'}))} "
+                "(for a payload-free timing adversary use 'straggler')"
+            )
+        return payload, True
+    if name not in ATTACKS:
+        raise ValueError(
+            f"unknown attack {name!r}; available: {available_attacks()}"
+        )
+    return name, False
+
+
+def available_attacks() -> tuple[str, ...]:
+    """All accepted attack names, including straggler compositions."""
+    return tuple(sorted(ATTACKS)) + tuple(sorted(TIMING_ATTACKS)) + tuple(
+        _TIMING_PREFIX + p for p in sorted(ATTACKS) if p != "none"
+    )
+
 
 def get_attack(name: str) -> Callable:
     """Return the *delta-level* ``attack(key, updates(M,d), n_byz) -> updates``.
 
     For wire-level attacks (``bit_flip``) this is the identity; the bit
-    inversion happens inside the aggregation pipeline.
+    inversion happens inside the aggregation pipeline. For straggler
+    compositions this is the payload's delta stage.
     """
-    return ATTACKS[name]
+    payload, _ = parse_attack(name)
+    return ATTACKS["none" if payload in WIRE_ATTACKS else payload]
 
 
 def attack_id(name: str) -> int:
     """Integer id of the delta-level stage of ``name`` (lax.switch index)."""
-    return ATTACK_IDS.index("none" if name in WIRE_ATTACKS else name)
+    payload, _ = parse_attack(name)
+    return ATTACK_IDS.index("none" if payload in WIRE_ATTACKS else payload)
 
 
 def is_wire_attack(name: str) -> bool:
-    return name in WIRE_ATTACKS
+    return parse_attack(name)[0] in WIRE_ATTACKS
+
+
+def is_timing_attack(name: str) -> bool:
+    return parse_attack(name)[1]
 
 
 def apply_attack(idx: jax.Array, key: jax.Array, updates: jax.Array, n_byz: int) -> jax.Array:

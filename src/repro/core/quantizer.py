@@ -30,6 +30,7 @@ __all__ = [
     "packed_binarize_batch",
     "packed_sign_batch",
     "packed_counts",
+    "packed_weighted_counts",
     "packed_residuals",
 ]
 
@@ -181,11 +182,14 @@ def packed_sign_batch(deltas: jax.Array, *, chunk: int = PACK_CHUNK) -> jax.Arra
     return _pack_bool_lastdim(deltas_p >= 0)
 
 
-def packed_counts(packed: jax.Array, *, chunk: int = PACK_CHUNK) -> jax.Array:
-    """Vote counts ``N_i`` straight from the packed wire, chunked over d.
+def _chunked_bit_counts(
+    packed: jax.Array, chunk: int, weights: jax.Array | None
+) -> jax.Array:
+    """Shared chunk walk for the packed-wire count reductions.
 
-    packed: (M, P) uint8 -> counts (8 * P,) int32. Only O(M * chunk) bits
-    are unpacked at a time; the int8 code matrix never materializes.
+    One chunk-layout / pad-handling implementation serves both the integer
+    and the weighted count so the two can never diverge; only the
+    per-chunk reduction differs.
     """
     m, pbytes = packed.shape
     cb = min(chunk // 8, pbytes)
@@ -196,10 +200,40 @@ def packed_counts(packed: jax.Array, *, chunk: int = PACK_CHUNK) -> jax.Array:
     def one_chunk(j):
         pch = jax.lax.dynamic_slice_in_dim(packed, j * cb, cb, axis=1)
         bits = (pch[..., None] >> shifts) & jnp.uint8(1)  # (M, cb, 8)
-        return jnp.sum(bits.astype(jnp.int32), axis=0).reshape(cb * 8)
+        if weights is None:
+            acc = bits.astype(jnp.int32)
+        else:
+            acc = bits.astype(jnp.float32) * weights[:, None, None]
+        return jnp.sum(acc, axis=0).reshape(cb * 8)
 
     counts = jax.lax.map(one_chunk, jnp.arange(pb_pad // cb)).reshape(-1)
     return counts[: 8 * pbytes]
+
+
+def packed_counts(packed: jax.Array, *, chunk: int = PACK_CHUNK) -> jax.Array:
+    """Vote counts ``N_i`` straight from the packed wire, chunked over d.
+
+    packed: (M, P) uint8 -> counts (8 * P,) int32. Only O(M * chunk) bits
+    are unpacked at a time; the int8 code matrix never materializes.
+    """
+    return _chunked_bit_counts(packed, chunk, None)
+
+
+def packed_weighted_counts(
+    packed: jax.Array, weights: jax.Array, *, chunk: int = PACK_CHUNK
+) -> jax.Array:
+    """Age-weighted vote counts ``N_i^w = sum_m w_m 1[c_i^m = +1]``.
+
+    The buffered-asynchronous server weights each buffered upload by its
+    staleness weight *before* the Eq. 13 estimate; the packed uint8 wire is
+    consumed unchanged — only the count reduction carries the weights.
+    With unit weights the result equals :func:`packed_counts` exactly
+    (a float sum of {0, 1} terms is exact below 2**24), which is what makes
+    the zero-latency async round bit-exact with the synchronous one.
+
+    packed: (M, P) uint8, weights: (M,) f32 -> counts (8 * P,) f32.
+    """
+    return _chunked_bit_counts(packed, chunk, weights.astype(jnp.float32))
 
 
 def packed_residuals(

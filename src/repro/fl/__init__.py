@@ -6,11 +6,15 @@ The round math lives in :mod:`repro.fl.rounds` as a pure functional core;
 whole scenario grids over it."""
 
 from .rounds import (
+    AsyncRoundState,
     CellParams,
     RoundContext,
     RoundState,
+    async_fl_round,
     cell_params,
     fl_round,
+    init_async_state,
+    init_run_state,
     init_state,
     make_context,
     run_rounds,
@@ -21,11 +25,15 @@ __all__ = [
     "FLConfig",
     "FLSimulation",
     "RoundState",
+    "AsyncRoundState",
     "RoundContext",
     "CellParams",
     "make_context",
     "init_state",
+    "init_async_state",
+    "init_run_state",
     "cell_params",
     "fl_round",
+    "async_fl_round",
     "run_rounds",
 ]

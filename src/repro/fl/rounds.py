@@ -1,5 +1,16 @@
 """Pure functional FL round core — paper Algorithm 1 as state -> state.
 
+Two round variants share one client side (:func:`_client_uploads`):
+
+* :func:`fl_round` — the paper's synchronous protocol (all M sampled
+  clients upload in lockstep);
+* :func:`async_fl_round` — buffered-asynchronous rounds (beyond paper):
+  uploads arrive per a latency model, the server estimates from a bounded
+  staleness buffer with age-weighted vote counts, and the ``straggler``
+  timing adversary can withhold Byzantine uploads. See
+  :class:`AsyncRoundState` / :func:`async_fl_round` for exactly which
+  paper assumptions are relaxed.
+
 This module is the engine under both execution harnesses:
 
 * :class:`repro.fl.FLSimulation` — the stateful, host-driven wrapper that
@@ -42,24 +53,32 @@ from jax.flatten_util import ravel_pytree
 
 from ..core import (
     BState,
+    DenseWire,
     apply_attack,
     attack_id as _attack_id,
     init_b_state,
+    is_timing_attack,
     is_wire_attack,
     loss_bit,
+    staleness_weights,
     update_b,
 )
 from ..optim import local_prox_train
 
 __all__ = [
     "RoundState",
+    "AsyncRoundState",
     "CellParams",
     "RoundContext",
     "make_context",
     "init_state",
+    "init_async_state",
+    "init_run_state",
     "cell_params",
     "round_batches",
     "fl_round",
+    "async_fl_round",
+    "round_fn",
     "evaluate",
     "run_rounds",
 ]
@@ -78,6 +97,35 @@ class RoundState:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class AsyncRoundState:
+    """State of one *buffered-asynchronous* FL run (paper assumption relaxed).
+
+    The paper's Theorems 2-4 analyze synchronous rounds: all M sampled
+    clients upload in lockstep and the server estimates from exactly this
+    round's codes. ``AsyncRoundState`` relaxes that arrival assumption —
+    the server keeps a bounded buffer of the last-arrived packed one-bit
+    uploads (one wire row per slot) tagged with staleness ages, and each
+    round estimates from the *buffer*, not the fresh cohort. Everything
+    else (Eq. 5 compression, the packed uint8 wire, the Eq. 13 estimate
+    shape, the dynamic-b controller) is unchanged; staleness enters only
+    as a per-row weight folded into the vote counts.
+
+    The first four fields mirror :class:`RoundState` (the sync state
+    embeds structurally, so drivers can read ``w_global`` etc. off either).
+    """
+
+    w_global: jax.Array  # (d,)
+    w_locals: jax.Array  # (n_clients, d) personal models
+    b: BState  # dynamic-b controller state
+    residuals: jax.Array  # (n_clients, d) error-feedback residuals
+    buf_rows: jax.Array  # (B, P) uint8 packed wire rows | (B, d) f32 dense
+    buf_age: jax.Array  # (B,) int32 rounds since the slot's upload arrived
+    buf_valid: jax.Array  # (B,) bool slot holds an upload
+    buf_owner: jax.Array  # (B,) int32 client index that wrote the slot (-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class CellParams:
     """Traced per-cell scenario knobs — the vmappable campaign axes.
 
@@ -91,6 +139,9 @@ class CellParams:
     lam: Any
     attack_id: Any  # int index into repro.core.ATTACK_IDS (delta stage)
     flip_gate: Any  # bool: arm the bit_flip wire adversary (needs flip_n>0)
+    latency: Any  # f32 mean upload latency in rounds; P(arrive) = 1/(1+lat)
+    staleness_decay: Any  # f32 age-weight exponent: w(age) = (1+age)^(-decay)
+    straggler_gate: Any  # bool: arm the straggler timing adversary
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +220,44 @@ def init_state(ctx: RoundContext, b_init=None) -> RoundState:
     )
 
 
+def init_async_state(ctx: RoundContext, b_init=None) -> AsyncRoundState:
+    """Fresh async run state: empty staleness buffer, sync fields as usual.
+
+    Buffer row shape follows the pipeline's wire format (packed uint8 for
+    bit schemes, dense f32 for FedAvg / Fed-GM); all slots start invalid,
+    so an estimate before any arrival is zero.
+    """
+    cfg = ctx.cfg
+    base = init_state(ctx, b_init)
+    n_bytes = ctx.pipeline.compressor.wire_bytes(ctx.d)
+    if n_bytes is None:
+        rows = jnp.zeros((cfg.async_buffer, ctx.d), jnp.float32)
+    else:
+        rows = jnp.zeros((cfg.async_buffer, n_bytes), jnp.uint8)
+    return AsyncRoundState(
+        w_global=base.w_global,
+        w_locals=base.w_locals,
+        b=base.b,
+        residuals=base.residuals,
+        buf_rows=rows,
+        buf_age=jnp.zeros((cfg.async_buffer,), jnp.int32),
+        buf_valid=jnp.zeros((cfg.async_buffer,), bool),
+        buf_owner=jnp.full((cfg.async_buffer,), -1, jnp.int32),
+    )
+
+
+def init_run_state(ctx: RoundContext, b_init=None):
+    """The state the context's config calls for (sync or buffered-async)."""
+    if ctx.cfg.async_buffer:
+        return init_async_state(ctx, b_init)
+    return init_state(ctx, b_init)
+
+
+def round_fn(ctx: RoundContext):
+    """The round function matching the context (sync or buffered-async)."""
+    return async_fl_round if ctx.cfg.async_buffer else fl_round
+
+
 def cell_params(cfg) -> CellParams:
     """The CellParams a single FLConfig describes (scalar leaves)."""
     return CellParams(
@@ -177,6 +266,9 @@ def cell_params(cfg) -> CellParams:
         lam=cfg.lam,
         attack_id=_attack_id(cfg.attack),
         flip_gate=is_wire_attack(cfg.attack),
+        latency=cfg.async_latency,
+        staleness_decay=cfg.staleness_decay,
+        straggler_gate=is_timing_attack(cfg.attack),
     )
 
 
@@ -193,28 +285,15 @@ def round_batches(ctx: RoundContext, key: jax.Array) -> dict:
     return {"x": bx, "y": by}
 
 
-def fl_round(
-    ctx: RoundContext,
-    params: CellParams,
-    key: jax.Array,
-    state: RoundState,
-    batches: dict,
-) -> tuple[RoundState, dict]:
-    """One FL round: local prox-training, attack, aggregate, b-control.
-
-    Returns the next state and per-round metrics: ``loss`` (mean post-
-    training local loss), ``b`` (controller value after the vote), and
-    ``theta_mse`` — the mean squared error of the aggregated ``theta_hat``
-    against the true mean of the (post-attack) uploaded updates, i.e. the
-    pure aggregation error the paper's Theorem 1 bounds at O(1/M).
-    """
+def _client_uploads(ctx, params, key, state, batches):
+    """The client side of a round, shared by the sync and async variants:
+    participation sampling, local prox-training, delta attack, and
+    compression onto the wire. Returns everything the two server variants
+    need; the RNG schedule is byte-identical between them, which is half
+    of the zero-latency bit-exactness guarantee (the other half is the
+    unit-weight count path, see ``packed_weighted_counts``)."""
     cfg = ctx.cfg
-    w_global, w_locals, b, residuals = (
-        state.w_global,
-        state.w_locals,
-        state.b,
-        state.residuals,
-    )
+    w_global = state.w_global
     if cfg.participation < 1.0:
         sel = jax.random.choice(
             jax.random.fold_in(key, 99), cfg.n_clients,
@@ -222,8 +301,8 @@ def fl_round(
         )
     else:
         sel = jnp.arange(cfg.n_clients)
-    w_sel = w_locals[sel]
-    res_sel = residuals[sel]
+    w_sel = state.w_locals[sel]
+    res_sel = state.residuals[sel]
     batches = jax.tree.map(lambda a: a[sel], batches)
 
     def client(w_local, cb, ck):
@@ -247,25 +326,162 @@ def fl_round(
     n_byz = int(cfg.n_active * cfg.byz_frac)
     deltas_att = apply_attack(params.attack_id, k_att, deltas, n_byz)
 
-    theta, res_new = ctx.pipeline(
-        k_q, deltas_att, b.b, res_sel,
+    wire, res_new = ctx.pipeline.compress_wire(
+        k_q, deltas_att, state.b.b, res_sel,
         flip_n=ctx.flip_n, flip_gate=params.flip_gate,
     )
-    w_global_new = w_global + theta
+    return sel, w_new, loss_before, loss_after, deltas_att, wire, res_new
 
+
+def _finish_round(ctx, state, sel, w_new, loss_before, loss_after, res_new, theta, deltas_att, state_cls, **extra):
+    """Server epilogue shared by both variants: global step, b-control,
+    state write-back, metrics."""
+    cfg = ctx.cfg
     bits = jax.vmap(loss_bit)(loss_before, loss_after)
-    b_new = update_b(b, bits, cfg.bctrl)
-    new_state = RoundState(
-        w_global=w_global_new,
-        w_locals=w_locals.at[sel].set(w_new),
+    b_new = update_b(state.b, bits, cfg.bctrl)
+    new_state = state_cls(
+        w_global=state.w_global + theta,
+        w_locals=state.w_locals.at[sel].set(w_new),
         b=b_new,
-        residuals=residuals.at[sel].set(res_new),
+        residuals=state.residuals.at[sel].set(res_new),
+        **extra,
     )
     metrics = {
         "loss": jnp.mean(loss_after),
         "b": b_new.b,
         "theta_mse": jnp.mean((theta - jnp.mean(deltas_att, axis=0)) ** 2),
     }
+    return new_state, metrics
+
+
+def fl_round(
+    ctx: RoundContext,
+    params: CellParams,
+    key: jax.Array,
+    state: RoundState,
+    batches: dict,
+) -> tuple[RoundState, dict]:
+    """One FL round: local prox-training, attack, aggregate, b-control.
+
+    Returns the next state and per-round metrics: ``loss`` (mean post-
+    training local loss), ``b`` (controller value after the vote), and
+    ``theta_mse`` — the mean squared error of the aggregated ``theta_hat``
+    against the true mean of the (post-attack) uploaded updates, i.e. the
+    pure aggregation error the paper's Theorem 1 bounds at O(1/M).
+    """
+    sel, w_new, loss_before, loss_after, deltas_att, wire, res_new = (
+        _client_uploads(ctx, params, key, state, batches)
+    )
+    theta = ctx.pipeline.estimate(wire)
+    return _finish_round(
+        ctx, state, sel, w_new, loss_before, loss_after, res_new,
+        theta, deltas_att, RoundState,
+    )
+
+
+def async_fl_round(
+    ctx: RoundContext,
+    params: CellParams,
+    key: jax.Array,
+    state: AsyncRoundState,
+    batches: dict,
+) -> tuple[AsyncRoundState, dict]:
+    """One buffered-asynchronous FL round (relaxes the paper's synchrony).
+
+    Assumptions of the paper this variant relaxes, and what replaces them:
+
+    * **Lockstep arrival** (Theorems 2-4 assume all M sampled clients
+      upload every round): each client's upload instead *arrives* with
+      probability ``1/(1 + latency)`` (``CellParams.latency``, traced, so
+      a latency axis vmaps). A non-arriving client leaves its buffer slot
+      holding its last delivered upload, one round staler.
+    * **Fresh-cohort estimation** (Eq. 13 averages this round's codes):
+      the server estimates from its bounded buffer (``async_buffer``
+      slots; client m writes slot ``m mod B``, so ``B = M`` is one slot
+      per client and ``B < M`` models slot contention under server memory
+      pressure). Each buffered row is weighted ``(1+age)^(-staleness_decay)``
+      — the weight folds into the vote counts *before* the Eq. 13 MLE
+      (``packed_weighted_counts``), so the packed uint8 wire format and
+      the estimate shape are unchanged.
+    * **Range consistency**: a stale row's bits were drawn against the
+      ``b`` of its production round but are estimated under the current
+      ``b`` — one-bit codes are range-free votes, and the resulting scale
+      error is bounded by the controller's per-round step (``1.01/0.98``)
+      to the power of the age.
+
+    The one-bit loss vote for the b-controller and the EF residual
+    write-back stay synchronous: both are client-side state or O(1-bit)
+    signals that piggyback on the round heartbeat, not model uploads.
+
+    Degenerate parity: with ``async_buffer == n_active``, zero latency,
+    and ``staleness_decay == 0`` every slot refreshes every round with
+    weight exactly 1.0, and the trajectory is bit-exact with
+    :func:`fl_round` (asserted in ``tests/test_async_rounds.py``).
+
+    Extra metrics: ``buf_fill`` (fraction of valid slots) and ``mean_age``
+    (mean staleness over valid slots).
+    """
+    cfg = ctx.cfg
+    m_act, n_buf = cfg.n_active, cfg.async_buffer
+    sel, w_new, loss_before, loss_after, deltas_att, wire, res_new = (
+        _client_uploads(ctx, params, key, state, batches)
+    )
+    rows = wire.updates if isinstance(wire, DenseWire) else wire.packed
+
+    # Arrival model: Bernoulli(1/(1+latency)) per (round, client). The
+    # straggler timing adversary overrides its Byzantine rows' arrivals:
+    # a (colluding) Byzantine client delivers only while its slot holds no
+    # Byzantine upload, then the cohort withholds — the poisoned upload
+    # sits in the buffer at ever-growing staleness, and if a slot-sharing
+    # honest client evicts it (B < M), a Byzantine sharer re-delivers to
+    # re-poison the slot. Gating on "any Byzantine resident" rather than
+    # "my upload resident" keeps colluders from evicting each other
+    # (which would reset the slot's age every round).
+    p_arrive = 1.0 / (1.0 + params.latency)
+    u = jax.random.uniform(jax.random.fold_in(key, 7), (m_act,))
+    delivered = u < p_arrive
+    slot = jnp.arange(m_act) % n_buf
+    n_byz = int(m_act * cfg.byz_frac)
+    byz = jnp.arange(m_act) < n_byz
+    slot_owner = state.buf_owner[slot]
+    byz_resident = (slot_owner >= 0) & (slot_owner < n_byz)
+    delivered = jnp.where(params.straggler_gate & byz, ~byz_resident, delivered)
+
+    # Fold the M fresh rows into the B slots, later clients winning shared
+    # slots (static unrolled generations keep shapes vmappable).
+    n_gen = -(-m_act // n_buf)
+    pad = n_gen * n_buf - m_act
+    rows_p = jnp.pad(rows, ((0, pad),) + ((0, 0),) * (rows.ndim - 1))
+    del_p = jnp.pad(delivered, (0, pad))
+    buf, hit = state.buf_rows, jnp.zeros((n_buf,), bool)
+    owner = state.buf_owner
+    for g in range(n_gen):
+        d_g = del_p[g * n_buf : (g + 1) * n_buf]
+        r_g = rows_p[g * n_buf : (g + 1) * n_buf]
+        buf = jnp.where(d_g.reshape((-1,) + (1,) * (rows.ndim - 1)), r_g, buf)
+        owner = jnp.where(d_g, g * n_buf + jnp.arange(n_buf), owner)
+        hit = hit | d_g
+    age = jnp.where(hit, 0, state.buf_age + 1)
+    valid = state.buf_valid | hit
+
+    # Age-weighted estimate from the buffered wire (current public b).
+    weights = staleness_weights(age, params.staleness_decay, valid)
+    if isinstance(wire, DenseWire):
+        buf_wire = DenseWire(updates=buf)
+    else:
+        buf_wire = dataclasses.replace(wire, packed=buf)
+    theta = ctx.pipeline.estimate(buf_wire, weights=weights)
+
+    new_state, metrics = _finish_round(
+        ctx, state, sel, w_new, loss_before, loss_after, res_new,
+        theta, deltas_att, AsyncRoundState,
+        buf_rows=buf, buf_age=age, buf_valid=valid, buf_owner=owner,
+    )
+    n_valid = jnp.sum(valid.astype(jnp.float32))
+    metrics["buf_fill"] = n_valid / n_buf
+    metrics["mean_age"] = jnp.sum(
+        age.astype(jnp.float32) * valid
+    ) / jnp.maximum(n_valid, 1.0)
     return new_state, metrics
 
 
@@ -289,15 +505,18 @@ def run_rounds(
     (``key, kb, kr = split(key, 3)``; batches from ``kb``, round from
     ``kr``), so at a fixed seed this reproduces the sequential driver.
     Returns the final state and the metrics trajectory (each metric is a
-    ``(rounds,)`` array; ``acc`` included when ``with_acc``).
+    ``(rounds,)`` array; ``acc`` included when ``with_acc``). The round
+    variant follows the carried state: an :class:`AsyncRoundState` scans
+    :func:`async_fl_round`, a :class:`RoundState` the synchronous round.
     """
     rounds = rounds or ctx.cfg.rounds
+    step = async_fl_round if isinstance(state, AsyncRoundState) else fl_round
 
     def body(carry, _):
         key, state = carry
         key, kb, kr = jax.random.split(key, 3)
         batches = round_batches(ctx, kb)
-        state, m = fl_round(ctx, params, kr, state, batches)
+        state, m = step(ctx, params, kr, state, batches)
         if with_acc:
             m = dict(m, acc=evaluate(ctx, state.w_global))
         return (key, state), m

@@ -34,7 +34,14 @@ from typing import Callable
 import jax
 import numpy as np
 
-from ..core import ATTACKS, BControlConfig, DPConfig, available_aggregators, build_pipeline
+from ..core import (
+    BControlConfig,
+    DPConfig,
+    available_aggregators,
+    build_pipeline,
+    is_timing_attack,
+    parse_attack,
+)
 from . import rounds as _rounds
 
 _B_MODES = ("dynamic", "fixed", "oracle")
@@ -73,6 +80,18 @@ class FLConfig:
     # Amplification-by-subsampling would further tighten the DP budget —
     # we keep the per-round eps unchanged (conservative).
     participation: float = 1.0
+    # BEYOND-PAPER: buffered-asynchronous rounds (the ROADMAP's
+    # async/straggler item). 0 = the paper's synchronous protocol; B > 0
+    # keeps a B-slot server buffer of the last-arrived packed uploads and
+    # estimates from it with age-weighted vote counts (see
+    # repro.fl.rounds.async_fl_round for the exact assumptions relaxed).
+    async_buffer: int = 0
+    # Mean upload latency in rounds; per-round arrival probability is
+    # 1/(1 + async_latency). Traced (vmappable campaign axis).
+    async_latency: float = 0.0
+    # Staleness discount exponent: a buffered upload of age a is weighted
+    # (1 + a)^(-staleness_decay) in the vote counts. 0 = uniform weights.
+    staleness_decay: float = 0.0
     agg_step: float = 0.01  # server step for signSGD-MV / RSA
     gm_iters: int = 16
     use_kernels: bool = False
@@ -84,11 +103,7 @@ class FLConfig:
                 f"unknown aggregator {self.aggregator!r}; "
                 f"available: {available_aggregators()}"
             )
-        if self.attack not in ATTACKS:
-            raise ValueError(
-                f"unknown attack {self.attack!r}; "
-                f"available: {tuple(sorted(ATTACKS))}"
-            )
+        parse_attack(self.attack)  # raises ValueError on unknown names
         if self.b_mode not in _B_MODES:
             raise ValueError(
                 f"unknown b_mode {self.b_mode!r}; available: {_B_MODES}"
@@ -98,6 +113,48 @@ class FLConfig:
                 "topk_frac < 1 releases a data-dependent index set and "
                 "breaks the (eps,0)-DP guarantee; use dense PRoBit+ with DP."
             )
+        if self.async_buffer < 0:
+            raise ValueError(f"async_buffer must be >= 0, got {self.async_buffer}")
+        if self.async_latency < 0:
+            raise ValueError(f"async_latency must be >= 0, got {self.async_latency}")
+        if self.staleness_decay < 0:
+            raise ValueError(
+                f"staleness_decay must be >= 0 (weights must be monotone "
+                f"non-increasing in age), got {self.staleness_decay}"
+            )
+        if not self.async_buffer:
+            if self.async_latency > 0 or self.staleness_decay > 0:
+                raise ValueError(
+                    "async_latency/staleness_decay require buffered-async "
+                    "rounds (set async_buffer > 0)"
+                )
+            if is_timing_attack(self.attack):
+                raise ValueError(
+                    f"timing attack {self.attack!r} needs asynchronous rounds "
+                    "(set async_buffer > 0); synchronous rounds have no "
+                    "arrival schedule to attack"
+                )
+        else:
+            if self.participation < 1.0:
+                raise ValueError(
+                    "async rounds require participation == 1.0: buffer "
+                    "slots, staleness ages, and the straggler gate are keyed "
+                    "to client identity, which a per-round resampled cohort "
+                    "breaks. Model partial availability with async_latency "
+                    "instead (a client arriving with probability "
+                    "1/(1+latency) subsumes sampling)."
+                )
+            if self.topk_frac < 1.0:
+                raise ValueError(
+                    "async rounds buffer dense packed wires; topk_frac < 1 "
+                    "(SparseWire) cannot be staleness-buffered"
+                )
+            if self.async_buffer > self.n_active:
+                raise ValueError(
+                    f"async_buffer={self.async_buffer} exceeds the cohort "
+                    f"({self.n_active} clients); slots beyond one per client "
+                    "would never be written"
+                )
 
     @property
     def n_active(self) -> int:
@@ -154,10 +211,10 @@ class FLSimulation:
         self.ctx = _rounds.make_context(
             cfg, init_params, loss_fn, acc_fn, client_x, client_y, test
         )
-        self.state = _rounds.init_state(self.ctx)
+        self.state = _rounds.init_run_state(self.ctx)
         self._params = _rounds.cell_params(cfg)
         self._round = jax.jit(
-            functools.partial(_rounds.fl_round, self.ctx, self._params)
+            functools.partial(_rounds.round_fn(self.ctx), self.ctx, self._params)
         )
         self.history: list[dict] = []
 

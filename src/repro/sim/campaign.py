@@ -12,9 +12,11 @@ core (:mod:`repro.fl.rounds`) instead of sequential Python-looped
 2. Within a group, the engine **vmaps** over all (cell, seed) pairs at
    once. Cells may differ in the *traced* scenario fields
    (:data:`VMAP_FIELDS`): learning rate, momentum, prox weight, b_init,
-   the seed, and the attack — delta-level attacks dispatch through
-   ``lax.switch`` on a traced id, and the ``bit_flip`` wire adversary is a
-   traced gate, so a full attack axis rides a single vmapped batch.
+   the seed, the async arrival latency and staleness decay, and the
+   attack — delta-level attacks dispatch through ``lax.switch`` on a
+   traced id, and the ``bit_flip`` wire adversary and the ``straggler``
+   timing adversary are traced gates, so a full attack axis (timing
+   included) rides a single vmapped batch.
 3. Groups whose shapes or static fields differ (e.g. an M-sweep changing
    ``n_clients``) **fall back to grouped execution**: one compiled
    program per group, still scanned over rounds and vmapped over seeds.
@@ -38,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import is_wire_attack
+from ..core import is_timing_attack, is_wire_attack
 from ..fl import FLConfig
 from ..fl import rounds as R
 from .metrics import CampaignResult, CellResult
@@ -54,7 +56,15 @@ __all__ = [
 
 # FLConfig fields that enter the compiled program only as traced values —
 # cells differing solely in these (plus the seed) share one vmapped trace.
-VMAP_FIELDS = frozenset({"lr", "momentum", "lam", "b_init", "attack", "seed"})
+# The attack axis covers timing adversaries too: a ``straggler+payload``
+# cell rides the same program as its payload-only neighbour (the timing
+# gate is a traced bool). ``async_buffer`` is deliberately NOT here — it
+# shapes the buffer, so sync and async cells compile separate programs,
+# but both kinds group and run inside one ``run_campaign`` call.
+VMAP_FIELDS = frozenset(
+    {"lr", "momentum", "lam", "b_init", "attack", "seed",
+     "async_latency", "staleness_decay"}
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,10 +150,17 @@ def _batched_inputs(ctx, cfgs: list[FLConfig], seeds: Sequence[int]):
         flip_gate=jnp.asarray(
             [is_wire_attack(c.attack) for c, _ in elems], jnp.bool_
         ),
+        latency=jnp.asarray([c.async_latency for c, _ in elems], jnp.float32),
+        staleness_decay=jnp.asarray(
+            [c.staleness_decay for c, _ in elems], jnp.float32
+        ),
+        straggler_gate=jnp.asarray(
+            [is_timing_attack(c.attack) for c, _ in elems], jnp.bool_
+        ),
     )
     keys = jnp.stack([jax.random.PRNGKey(s) for _, s in elems])
     b_inits = jnp.asarray([c.b_init for c, _ in elems], jnp.float32)
-    states = jax.vmap(lambda b0: R.init_state(ctx, b0))(b_inits)
+    states = jax.vmap(lambda b0: R.init_run_state(ctx, b0))(b_inits)
     return params, keys, states
 
 

@@ -1,0 +1,374 @@
+"""Buffered-asynchronous round tests: parity, buffer semantics, straggler.
+
+The load-bearing test is the degenerate-parity one: ``async_fl_round``
+with a full buffer (``async_buffer == n_active``), zero latency, and
+staleness decay 0 must reproduce the synchronous ``fl_round`` trajectory
+*bit for bit* over 5 rounds for every registered aggregator — that is
+what licenses threading one async code path through the campaign engine
+without re-validating the paper's synchronous claims.
+
+The straggler regression pins the composite timing adversary
+(``straggler+sign_flip``) below the Theorem-2 breakdown point and asserts
+the async aggregation error stays within 2x of the synchronous run — the
+guard against staleness weighting *amplifying* withheld Byzantine votes.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import make_classification, partition_label_skew
+from repro.fl import FLConfig
+from repro.fl import rounds as R
+from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
+from repro.sim import CampaignSpec, CellSpec, Task, run_campaign
+
+N_CLIENTS = 10
+AGGREGATORS = ("probit_plus", "fedavg", "fed_gm", "signsgd_mv", "rsa")
+
+
+@pytest.fixture(scope="module")
+def task():
+    (xtr, ytr), (xte, yte) = make_classification(0, n_train=1000, n_test=200)
+    parts = partition_label_skew(ytr, N_CLIENTS, 2, 60, seed=1)
+    return Task(
+        init_params=init_mlp(jax.random.PRNGKey(0), hidden=8),
+        loss_fn=functools.partial(xent_loss, mlp_logits),
+        acc_fn=functools.partial(accuracy, mlp_logits),
+        client_x=np.stack([xtr[i] for i in parts]),
+        client_y=np.stack([ytr[i] for i in parts]),
+        test={"x": xte, "y": yte},
+    )
+
+
+def _ctx(task, cfg):
+    return R.make_context(
+        cfg, task.init_params, task.loss_fn, task.acc_fn,
+        task.client_x, task.client_y, task.test,
+    )
+
+
+def _degenerate_pair(aggregator, rounds=5):
+    base = dict(
+        n_clients=N_CLIENTS, rounds=rounds, local_epochs=1,
+        aggregator=aggregator,
+    )
+    return FLConfig(**base), FLConfig(
+        **base, async_buffer=N_CLIENTS, async_latency=0.0, staleness_decay=0.0
+    )
+
+
+@pytest.mark.parametrize("aggregator", AGGREGATORS)
+def test_async_zero_latency_is_bit_exact_with_sync(task, aggregator):
+    """Acceptance: buffer=M, latency=0, decay=0 => bit-exact RoundState
+    trajectory (and metrics) over 5 rounds, for all five aggregators.
+
+    Run eagerly: the two variants execute the *identical op schedule* in
+    the degenerate case (unit weights make the weighted count/mean paths
+    value-identical op by op), which eager dispatch compares exactly.
+    Under jit, XLA fuses the weight multiplies into the reductions with
+    different tiling per program, reassociating sums at the ~1e-12
+    relative level — the jitted scan path is covered at tight tolerance
+    by ``test_async_zero_latency_scan_matches_sync_jitted`` below.
+    """
+    cfg_s, cfg_a = _degenerate_pair(aggregator)
+    ctx_s, ctx_a = _ctx(task, cfg_s), _ctx(task, cfg_a)
+    ps, pa = R.cell_params(cfg_s), R.cell_params(cfg_a)
+    with jax.disable_jit():
+        ss, sa = R.init_run_state(ctx_s), R.init_run_state(ctx_a)
+        key = jax.random.PRNGKey(cfg_s.seed)
+        for _ in range(5):
+            key, kb, kr = jax.random.split(key, 3)
+            batches = R.round_batches(ctx_s, kb)
+            ss, ms = R.fl_round(ctx_s, ps, kr, ss, batches)
+            sa, ma = R.async_fl_round(ctx_a, pa, kr, sa, batches)
+            np.testing.assert_array_equal(
+                np.asarray(ss.w_global), np.asarray(sa.w_global)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(ss.w_locals), np.asarray(sa.w_locals)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(ss.residuals), np.asarray(sa.residuals)
+            )
+            assert float(ss.b.b) == float(sa.b.b)
+            for k in ("loss", "b", "theta_mse"):
+                assert float(ms[k]) == float(ma[k]), k
+            # degenerate buffer is fully fresh every round
+            assert float(ma["buf_fill"]) == 1.0
+            assert float(ma["mean_age"]) == 0.0
+
+
+@pytest.mark.parametrize("aggregator", ("probit_plus", "fedavg"))
+def test_async_zero_latency_scan_matches_sync_jitted(task, aggregator):
+    """The jitted/scanned execution of the degenerate async config tracks
+    the sync scan within float tolerance (XLA fusion may reassociate the
+    weighted reductions; see the eager bit-exact test above)."""
+    cfg_s, cfg_a = _degenerate_pair(aggregator)
+    ctx_s, ctx_a = _ctx(task, cfg_s), _ctx(task, cfg_a)
+    key = jax.random.PRNGKey(0)
+    fs, traj_s = jax.jit(
+        lambda k: R.run_rounds(ctx_s, R.cell_params(cfg_s), k,
+                               R.init_run_state(ctx_s), 5)
+    )(key)
+    fa, traj_a = jax.jit(
+        lambda k: R.run_rounds(ctx_a, R.cell_params(cfg_a), k,
+                               R.init_run_state(ctx_a), 5)
+    )(key)
+    np.testing.assert_allclose(
+        np.asarray(fs.w_global), np.asarray(fa.w_global), rtol=0, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(traj_s["acc"]), np.asarray(traj_a["acc"]), atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(traj_s["loss"]), np.asarray(traj_a["loss"]), rtol=1e-5
+    )
+
+
+def test_empty_buffer_estimates_zero(task):
+    """Under extreme latency nothing arrives: every slot stays invalid,
+    the weighted estimate is exactly zero, and the global model does not
+    move — the async server never steps on an empty buffer."""
+    cfg = FLConfig(
+        n_clients=N_CLIENTS, rounds=2, local_epochs=1,
+        async_buffer=N_CLIENTS, async_latency=1e9,
+    )
+    ctx = _ctx(task, cfg)
+    params = R.cell_params(cfg)
+    state = R.init_run_state(ctx)
+    w0 = np.asarray(state.w_global)
+    key = jax.random.PRNGKey(0)
+    for _ in range(2):
+        key, kb, kr = jax.random.split(key, 3)
+        state, m = R.async_fl_round(
+            ctx, params, kr, state, R.round_batches(ctx, kb)
+        )
+        assert float(m["buf_fill"]) == 0.0
+        np.testing.assert_array_equal(np.asarray(state.w_global), w0)
+    assert not bool(np.any(np.asarray(state.buf_valid)))
+
+
+def test_straggler_delivers_once_then_withholds(task):
+    """The straggler timing adversary fills its slot on round 1 and never
+    refreshes: its upload's age grows by one per round while (here, under
+    extreme honest latency) honest slots stay empty."""
+    byz_frac = 0.2
+    n_byz = int(N_CLIENTS * byz_frac)
+    cfg = FLConfig(
+        n_clients=N_CLIENTS, rounds=4, local_epochs=1, byz_frac=byz_frac,
+        attack="straggler+sign_flip", async_buffer=N_CLIENTS,
+        async_latency=1e9,
+    )
+    ctx = _ctx(task, cfg)
+    params = R.cell_params(cfg)
+    state = R.init_run_state(ctx)
+    key = jax.random.PRNGKey(0)
+    for t in range(4):
+        key, kb, kr = jax.random.split(key, 3)
+        state, m = R.async_fl_round(
+            ctx, params, kr, state, R.round_batches(ctx, kb)
+        )
+        valid = np.asarray(state.buf_valid)
+        assert valid[:n_byz].all() and not valid[n_byz:].any()
+        np.testing.assert_array_equal(np.asarray(state.buf_age)[:n_byz], t)
+        assert float(m["buf_fill"]) == pytest.approx(n_byz / N_CLIENTS)
+        assert float(m["mean_age"]) == t
+
+
+def test_buffer_contention_smaller_than_cohort(task):
+    """B < M: clients share slots mod B; at zero latency every slot is
+    overwritten by its highest-index sharer each round (ages stay 0)."""
+    cfg = FLConfig(
+        n_clients=N_CLIENTS, rounds=3, local_epochs=1,
+        async_buffer=3, async_latency=0.0,
+    )
+    ctx = _ctx(task, cfg)
+    params = R.cell_params(cfg)
+    state = R.init_run_state(ctx)
+    key = jax.random.PRNGKey(0)
+    for _ in range(3):
+        key, kb, kr = jax.random.split(key, 3)
+        state, m = R.async_fl_round(
+            ctx, params, kr, state, R.round_batches(ctx, kb)
+        )
+        assert float(m["buf_fill"]) == 1.0
+        assert float(m["mean_age"]) == 0.0
+    assert state.buf_rows.shape[0] == 3
+
+
+def test_straggler_repoisons_contended_slot(task):
+    """Under slot contention (B < M) an honest slot-sharer can evict the
+    withheld Byzantine upload; the straggler must then *re-deliver* to
+    re-poison the slot rather than stay locked out (its gate is keyed to
+    slot ownership, not slot occupancy). Over a few rounds at pinned seed
+    both states must occur: the Byzantine client owning its slot at
+    growing age, and the honest sharer owning it after an eviction."""
+    n_buf, byz_frac = 5, 0.2
+    n_byz = int(N_CLIENTS * byz_frac)
+    cfg = FLConfig(
+        n_clients=N_CLIENTS, rounds=8, local_epochs=1, byz_frac=byz_frac,
+        attack="straggler+sign_flip", async_buffer=n_buf, async_latency=1.0,
+    )
+    ctx = _ctx(task, cfg)
+    params = R.cell_params(cfg)
+    state = R.init_run_state(ctx)
+    key = jax.random.PRNGKey(0)
+    byz_owned = honest_owned = 0
+    for _ in range(8):
+        key, kb, kr = jax.random.split(key, 3)
+        state, _ = R.async_fl_round(
+            ctx, params, kr, state, R.round_batches(ctx, kb)
+        )
+        owner = np.asarray(state.buf_owner)[:n_byz]
+        byz_owned += int(np.any((owner >= 0) & (owner < n_byz)))
+        honest_owned += int(np.any(owner >= n_byz))
+    assert byz_owned > 0, "straggler never re-poisoned its slot"
+    assert honest_owned > 0, "honest sharer never evicted the straggler"
+
+
+def test_colluding_stragglers_share_slot_without_evicting_each_other(task):
+    """Two Byzantine stragglers mapped to one slot (B < n_byz span) must
+    not ping-pong evict each other — the withhold gate is keyed to 'any
+    Byzantine upload resident', so the first delivery sticks and its
+    staleness grows exactly as for a lone straggler."""
+    byz_frac = 0.3  # byz clients 0,1,2; with B=2: clients 0 and 2 share slot 0
+    cfg = FLConfig(
+        n_clients=N_CLIENTS, rounds=5, local_epochs=1, byz_frac=byz_frac,
+        attack="straggler+sign_flip", async_buffer=2, async_latency=1e9,
+    )
+    ctx = _ctx(task, cfg)
+    params = R.cell_params(cfg)
+    state = R.init_run_state(ctx)
+    key = jax.random.PRNGKey(0)
+    owners = []
+    for t in range(5):
+        key, kb, kr = jax.random.split(key, 3)
+        state, _ = R.async_fl_round(
+            ctx, params, kr, state, R.round_batches(ctx, kb)
+        )
+        owners.append(np.asarray(state.buf_owner).copy())
+        # honest clients never arrive (extreme latency), so after round 0
+        # both slots hold Byzantine uploads aging one round per round
+        np.testing.assert_array_equal(np.asarray(state.buf_age), t)
+    # ownership settled in round 0 and never churned between colluders
+    for o in owners[1:]:
+        np.testing.assert_array_equal(o, owners[0])
+    assert all(0 <= o < 3 for o in owners[0])
+
+
+def test_straggler_theta_mse_within_2x_of_sync(task):
+    """Regression (satellite): at byz_frac 0.2 — below the Theorem-2
+    breakdown point beta < 1/2 — the straggler+sign_flip adversary must
+    not blow up the async aggregation error: per-run mean theta-MSE stays
+    within 2x of the synchronous sign_flip run at the pinned seeds.
+
+    Calibration (this exact grid, seeds 0-2): async/sync mean-theta-MSE
+    ratio 1.08 +/- 0.01 at decay 0.5 and 0.97 +/- 0.02 at decay 0, so the
+    2x bound has ~2x headroom against MC noise. A violation means the
+    staleness weighting started *amplifying* withheld Byzantine votes.
+    """
+    spec = CampaignSpec(
+        base=dict(
+            n_clients=N_CLIENTS, rounds=20, local_epochs=1,
+            byz_frac=0.2, b_mode="fixed",
+        ),
+        cells=(
+            CellSpec("sync", {"attack": "sign_flip"}),
+            CellSpec(
+                "async_strag",
+                {
+                    "attack": "straggler+sign_flip",
+                    "async_buffer": N_CLIENTS,
+                    "async_latency": 1.0,
+                    "staleness_decay": 0.5,
+                },
+            ),
+        ),
+        seeds=(0, 1, 2),
+    )
+    res = run_campaign(spec, lambda cfg: task, with_acc=False)
+    sync = res.cell("sync").metrics["theta_mse"].mean(axis=1)
+    strag = res.cell("async_strag").metrics["theta_mse"].mean(axis=1)
+    ratio = strag / sync
+    assert np.all(ratio < 2.0), ratio
+
+
+def test_mixed_sync_async_campaign_single_call(task, tmp_path):
+    """Acceptance: one run_campaign call executes a grid mixing sync and
+    async cells — async cells (including a straggler timing cell) share
+    one vmapped program, sync cells another — and the result serializes
+    to the campaign JSON artifact."""
+    spec = CampaignSpec(
+        base=dict(
+            n_clients=N_CLIENTS, rounds=3, local_epochs=1,
+            byz_frac=0.2, b_mode="fixed",
+        ),
+        cells=(
+            CellSpec("sync_gauss", {"attack": "gaussian"}),
+            CellSpec(
+                "async_gauss",
+                {"attack": "gaussian", "async_buffer": N_CLIENTS,
+                 "async_latency": 1.0, "staleness_decay": 0.5},
+            ),
+            CellSpec(
+                "async_strag",
+                {"attack": "straggler+sign_flip", "async_buffer": N_CLIENTS,
+                 "async_latency": 1.0, "staleness_decay": 0.5},
+            ),
+        ),
+        seeds=(0, 1),
+    )
+    res = run_campaign(spec, lambda cfg: task)
+    groups = sorted(sorted(g["cells"]) for g in res.groups)
+    assert groups == [["async_gauss", "async_strag"], ["sync_gauss"]]
+    for name in ("async_gauss", "async_strag"):
+        cell = res.cell(name)
+        assert cell.metrics["acc"].shape == (2, 3)
+        assert {"buf_fill", "mean_age"} <= set(cell.metrics)
+    assert "buf_fill" not in res.cell("sync_gauss").metrics
+    path = res.save(str(tmp_path / "mixed_campaign.json"))
+    import json
+
+    with open(path) as f:
+        js = json.load(f)
+    assert set(js["cells"]) == {"sync_gauss", "async_gauss", "async_strag"}
+
+
+def test_async_config_validation():
+    """FLConfig rejects inconsistent async settings with precise errors."""
+    ok = dict(n_clients=4, rounds=1)
+    with pytest.raises(ValueError, match="async_buffer"):
+        FLConfig(**ok, async_buffer=-1)
+    with pytest.raises(ValueError, match="exceeds the cohort"):
+        FLConfig(**ok, async_buffer=5)
+    with pytest.raises(ValueError, match="async_latency"):
+        FLConfig(**ok, async_buffer=4, async_latency=-0.5)
+    with pytest.raises(ValueError, match="staleness_decay"):
+        FLConfig(**ok, async_buffer=4, staleness_decay=-1.0)
+    with pytest.raises(ValueError, match="require buffered-async"):
+        FLConfig(**ok, async_latency=1.0)
+    with pytest.raises(ValueError, match="require buffered-async"):
+        FLConfig(**ok, staleness_decay=0.5)
+    with pytest.raises(ValueError, match="timing attack"):
+        FLConfig(**ok, attack="straggler")
+    with pytest.raises(ValueError, match="timing attack"):
+        FLConfig(**ok, attack="straggler+alie")
+    with pytest.raises(ValueError, match="unknown straggler payload"):
+        FLConfig(**ok, attack="straggler+nope", async_buffer=4)
+    with pytest.raises(ValueError, match="use 'straggler'"):
+        FLConfig(**ok, attack="straggler+none", async_buffer=4)
+    with pytest.raises(ValueError, match="unknown attack"):
+        FLConfig(**ok, attack="nope")
+    with pytest.raises(ValueError, match="SparseWire"):
+        FLConfig(**ok, async_buffer=4, topk_frac=0.1)
+    # buffer slots are keyed to client identity; a resampled cohort breaks
+    # that, so async + partial participation is rejected (model partial
+    # availability with async_latency instead)
+    with pytest.raises(ValueError, match="participation == 1.0"):
+        FLConfig(**ok, async_buffer=2, participation=0.5)
+    # valid compositions construct fine
+    FLConfig(**ok, attack="straggler", async_buffer=4)
+    FLConfig(**ok, attack="straggler+bit_flip", async_buffer=2, byz_frac=0.25)

@@ -11,6 +11,10 @@ qualitative behavior:
 * **Byzantine graceful degradation** (Theorem 2 / Figs. 5-8): under the
   worst-case ``bit_flip`` wire adversary at up to 40% malicious clients,
   PRoBit+ training accuracy stays close to the clean run.
+* **Straggler-adversary robustness** (beyond paper; the synchronous
+  analysis cannot express timing attacks): the buffered-async round under
+  the ``straggler+sign_flip`` composite adversary degrades gracefully in
+  byz_frac, and the staleness discount does not amplify withheld votes.
 
 Everything is deterministic at the pinned seeds. The campaign JSON
 artifacts are written to ``reports/`` — the CI ``slow`` job uploads them.
@@ -110,3 +114,45 @@ def test_probit_graceful_under_bit_flip_campaign(task_fn):
     }
     assert acc[0.2] >= acc[0.0] - 0.1, acc
     assert acc[0.4] >= acc[0.0] - 0.12, acc
+
+
+def test_straggler_campaign_grid(task_fn):
+    """Nightly straggler sweep: buffered-async PRoBit+ under the
+    ``straggler+sign_flip`` timing adversary across byz_frac x
+    staleness_decay (decay and the timing gate are traced axes, so the
+    engine compiles one program per byz_frac, each vmapped over the
+    decay x seed batch). Asserts graceful degradation below the Theorem-2
+    breakdown point — the clean-async and attacked-async runs stay within
+    a training-accuracy margin — and writes the campaign JSON artifact
+    the CI ``slow`` job uploads next to the statistical-suite ones."""
+    m = 16
+    spec = CampaignSpec.from_grid(
+        dict(
+            n_clients=m,
+            rounds=30,
+            local_epochs=2,
+            attack="straggler+sign_flip",
+            async_buffer=m,
+            async_latency=1.0,
+        ),
+        {"byz_frac": [0.0, 0.125, 0.25], "staleness_decay": [0.0, 0.5]},
+        seeds=(0, 1),
+    )
+    result = run_campaign(spec, task_fn)
+    result.save("reports/statistical_async_straggler.json")
+    acc = {
+        (f, d): result.cell(
+            f"byz_frac={f}|staleness_decay={d}"
+        ).metrics["acc"][:, -5:].mean()
+        for f in (0.0, 0.125, 0.25)
+        for d in (0.0, 0.5)
+    }
+    for d in (0.0, 0.5):
+        assert acc[(0.125, d)] >= acc[(0.0, d)] - 0.1, acc
+        assert acc[(0.25, d)] >= acc[(0.0, d)] - 0.15, acc
+    # every cell keeps a filled buffer and finite staleness
+    for f in (0.0, 0.125, 0.25):
+        for d in (0.0, 0.5):
+            cell = result.cell(f"byz_frac={f}|staleness_decay={d}")
+            assert np.all(cell.metrics["buf_fill"][:, -1] > 0.5)
+            assert np.all(np.isfinite(cell.metrics["mean_age"]))
