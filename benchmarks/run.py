@@ -21,7 +21,8 @@ def main() -> None:
     rounds = 25 if args.quick else None
 
     from . import fig3_dynamic_b, fig4_clients_privacy, table1_byzantine
-    from . import fig_async_staleness, theorem_rates, kernels_micro, roofline
+    from . import fig_async_staleness, fig_privacy_amplification
+    from . import theorem_rates, kernels_micro, roofline
 
     results = {}
     print("name,us_per_call,derived")
@@ -37,6 +38,8 @@ def main() -> None:
     results["table1"] = table1_byzantine.main(rounds)
     print("# --- Async staleness: buffer x decay x byz_frac stragglers ---")
     results["fig_async"] = fig_async_staleness.main(rounds)
+    print("# --- Privacy amplification: participation x eps x aggregator ---")
+    results["fig_privacy"] = fig_privacy_amplification.main(rounds)
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -7,19 +7,71 @@ mechanism is ``(eps, 0)``-DP per round when the public range satisfies::
 
 where ``Delta_1`` is the l1-sensitivity of the local update (the paper uses
 ``Delta_1 = 0.02 * eta``). This module provides the b-floor, an empirical
-privacy-loss check used by tests, and simple composition helpers.
+privacy-loss check used by tests, and the per-round composition math; the
+stateful cross-round bookkeeping lives in :mod:`repro.core.ledger`
+(:class:`~repro.core.ledger.PrivacyLedger`).
+
+Subsampling assumptions (amplification)
+---------------------------------------
+Theorem 3's guarantee is *per participating client per round*. Under
+partial participation the server runs the round on a random cohort, and
+the round's **release** (the aggregated estimate) enjoys amplification by
+subsampling: a client included only with probability ``q`` suffers
+``eps' = ln(1 + q * (e^eps - 1)) < eps``. The pure-DP amplification bound
+holds for either sampling model:
+
+* **Poisson sampling** — each client tossed in independently with
+  probability ``q`` (the textbook amplification setting);
+* **without-replacement sampling** — a uniform ``m``-subset of the ``M``
+  clients, ``q = m / M``. This is what the runtime does
+  (``jax.random.choice(..., replace=False)`` over ``m_clients``), and it
+  qualifies for the same pure-eps bound: under replace-one adjacency the
+  challenge client is in the cohort with probability exactly ``q``, and
+  conditioned on exclusion the release distribution is unchanged, which
+  is all the two-point mixture argument needs.
+
+The amplified eps is what :class:`~repro.core.ledger.PrivacyLedger`
+composes under its ``subsampled`` accountant; ``q = 1`` reproduces the
+unamplified per-round eps bit-identically.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .quantizer import binarize_prob
 
-__all__ = ["DPConfig", "dp_b_floor", "privacy_loss", "basic_composition"]
+__all__ = [
+    "DPConfig",
+    "DELTA_SLACK",
+    "dp_b_floor",
+    "privacy_loss",
+    "basic_composition",
+    "strong_composition",
+    "advanced_composition",
+    "rounds_for_budget",
+]
+
+# Default failure probability spent by the advanced (DRV) accountant —
+# shared by advanced_composition, rounds_for_budget, and the ledger.
+DELTA_SLACK = 1e-5
+
+# Clamps for the empirical log-likelihood ratio: keep privacy_loss finite
+# when a coordinate sits on the public range (|delta| == b, where Eq. 5's
+# probability is exactly 0 or 1 and the log diverges). Chosen at the edges
+# of the float32 probability grid so NO interior value is altered: the
+# f32 Eq.-5 map produces no nonzero probability below 2^-25 and no value
+# strictly between 1 - 2^-24 and 1, so clipping to [_P_MIN, _P_MAX] bites
+# only at the deterministic endpoints (and at interior deltas so close to
+# b that f32 rounding already collapsed their probability onto 0/1 —
+# those get the same finite sentinel, an over- not under-report).
+_P_MIN = 2.0**-25
+_P_MAX = 1.0 - 2.0**-24
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,9 +106,20 @@ def privacy_loss(
     maximized over the outcome ``c``; summed over coordinates. Tests assert
     this is ``<= eps`` whenever ``b`` respects :func:`dp_b_floor` and
     ``||delta_a - delta_b||_1 <= Delta_1``.
+
+    Boundary coordinates — ``|delta| == b`` exactly, where Eq. 5 emits a
+    deterministic bit (probability 0 or 1) — would make the raw log ratio
+    ``inf``/NaN. The probabilities are clamped to ``[_P_MIN, _P_MAX]``
+    before the logs, so the returned loss is finite for every
+    ``delta in [-b, b]`` *including the endpoints* (a large-but-finite
+    sentinel of ``~ln(1/_P_MIN)`` per boundary coordinate rather than a
+    diverging one). The clamps sit exactly on the edges of the float32
+    probability grid (see their definition), so every probability the
+    compressor can actually realize strictly inside (0, 1) passes through
+    untouched — interior losses are reported exactly, never shrunk.
     """
-    pa = binarize_prob(delta_a, b)
-    pb = binarize_prob(delta_b, b)
+    pa = jnp.clip(binarize_prob(delta_a, b), _P_MIN, _P_MAX)
+    pb = jnp.clip(binarize_prob(delta_b, b), _P_MIN, _P_MAX)
     loss_plus = jnp.abs(jnp.log(pa) - jnp.log(pb))
     loss_minus = jnp.abs(jnp.log1p(-pa) - jnp.log1p(-pb))
     return jnp.sum(jnp.maximum(loss_plus, loss_minus))
@@ -68,8 +131,23 @@ def basic_composition(eps_per_round: float, rounds: int) -> float:
     return eps_per_round * rounds
 
 
+def strong_composition(eps_sq_sum, linear_sum, delta_slack: float):
+    """The Dwork-Rothblum-Vadhan kernel shared by every advanced-composition
+    call site (:func:`advanced_composition`, the ledger's event-log
+    ``compose`` and closed-form ``trajectory``)::
+
+        eps' = sqrt(2 ln(1/delta') * sum_t eps_t^2)
+               + sum_t eps_t * (e^{eps_t} - 1)
+
+    Takes the two sufficient statistics (scalars or numpy arrays) so the
+    heterogeneous, homogeneous, and vectorized callers all evaluate the
+    identical expression — one future correction fixes all of them.
+    """
+    return np.sqrt(2.0 * math.log(1.0 / delta_slack) * eps_sq_sum) + linear_sum
+
+
 def advanced_composition(
-    eps_per_round: float, rounds: int, delta_slack: float = 1e-5
+    eps_per_round: float, rounds: int, delta_slack: float = DELTA_SLACK
 ) -> tuple[float, float]:
     """Strong composition [Dwork-Rothblum-Vadhan]: T rounds of (eps,0)-DP
     give (eps', delta')-DP with::
@@ -80,20 +158,41 @@ def advanced_composition(
     T > 2 ln(1/delta') / eps^2 is NOT yet reached — i.e. for the small
     per-round eps this system runs (0.1 and below), advanced composition
     is the right multi-round accountant.
-    """
-    import math
 
+    Degenerate input: ``rounds <= 0`` reports exactly ``(0, 0)`` —
+    composing zero mechanisms spends neither eps nor the delta slack
+    (identical to the ledger's empty event log).
+    """
+    if rounds <= 0:
+        return 0.0, 0.0
     eps = eps_per_round
-    eps_total = math.sqrt(2.0 * rounds * math.log(1.0 / delta_slack)) * eps + (
-        rounds * eps * (math.exp(eps) - 1.0)
+    eps_total = float(
+        strong_composition(
+            rounds * (eps * eps), rounds * (eps * math.expm1(eps)), delta_slack
+        )
     )
     return eps_total, delta_slack
 
 
 def rounds_for_budget(
-    eps_budget: float, eps_per_round: float, delta_slack: float = 1e-5
+    eps_budget: float, eps_per_round: float, delta_slack: float = DELTA_SLACK
 ) -> int:
-    """Largest T such that advanced composition stays within eps_budget."""
+    """Largest T such that advanced composition stays within eps_budget.
+
+    Returns 0 when even a single round exceeds the budget (the previous
+    implementation could only count up from 1, silently reporting one
+    affordable round for arbitrarily small budgets). A budget exactly at
+    the T-round cost returns T. ``eps_per_round <= 0`` (DP disabled) is
+    rejected: every horizon is free, so "largest affordable T" has no
+    answer — and the previous code spun the search loop to its 10M cap.
+    """
+    if eps_per_round <= 0.0:
+        raise ValueError(
+            f"eps_per_round must be > 0, got {eps_per_round} (with DP "
+            "disabled every budget allows unboundedly many rounds)"
+        )
+    if advanced_composition(eps_per_round, 1, delta_slack)[0] > eps_budget:
+        return 0
     t = 1
     while advanced_composition(eps_per_round, t + 1, delta_slack)[0] <= eps_budget:
         t += 1

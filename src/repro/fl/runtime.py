@@ -35,8 +35,10 @@ import jax
 import numpy as np
 
 from ..core import (
+    ACCOUNTANTS,
     BControlConfig,
     DPConfig,
+    PrivacyLedger,
     available_aggregators,
     build_pipeline,
     is_timing_attack,
@@ -77,9 +79,16 @@ class FLConfig:
     topk_frac: float = 1.0
     # Partial participation: fraction of clients sampled per round
     # (cross-device FL standard; M in Eq. 13 becomes the sampled count).
-    # Amplification-by-subsampling would further tighten the DP budget —
-    # we keep the per-round eps unchanged (conservative).
+    # The mechanism keeps Theorem 3's per-round eps; what *tightens* under
+    # participation < 1 is the reported budget, via the ledger's
+    # amplification-by-subsampling accountant (see dp_accountant).
     participation: float = 1.0
+    # DP accountant for the run's PrivacyLedger: "subsampled" (default —
+    # per-round eps amplified by the sampling rate q = m/M before basic
+    # composition; q = 1 is bit-identical to "basic"), "basic"
+    # (conservative sum), or "advanced" (DRV strong composition at
+    # delta_slack = 1e-5). Host-side bookkeeping only — never traced.
+    dp_accountant: str = "subsampled"
     # BEYOND-PAPER: buffered-asynchronous rounds (the ROADMAP's
     # async/straggler item). 0 = the paper's synchronous protocol; B > 0
     # keeps a B-slot server buffer of the last-arrived packed uploads and
@@ -104,6 +113,15 @@ class FLConfig:
                 f"available: {available_aggregators()}"
             )
         parse_attack(self.attack)  # raises ValueError on unknown names
+        if self.dp_accountant not in ACCOUNTANTS:
+            raise ValueError(
+                f"unknown dp_accountant {self.dp_accountant!r}; "
+                f"available: {ACCOUNTANTS}"
+            )
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}"
+            )
         if self.b_mode not in _B_MODES:
             raise ValueError(
                 f"unknown b_mode {self.b_mode!r}; available: {_B_MODES}"
@@ -169,6 +187,29 @@ class FLConfig:
         return DPConfig(self.dp_epsilon, self.l1_sensitivity)
 
     @property
+    def sampling_rate(self) -> float:
+        """Effective per-round client sampling rate ``q = m_sampled / M``.
+
+        Derived from the *actual* cohort size (``n_active``, which floors
+        and clamps), not the raw ``participation`` fraction — the
+        amplification bound needs the realized inclusion probability.
+        Full participation is exactly 1.0.
+        """
+        if self.participation >= 1.0:
+            return 1.0
+        return self.n_active / self.n_clients
+
+    def ledger(self) -> PrivacyLedger:
+        """A fresh :class:`~repro.core.PrivacyLedger` for one run of this
+        config: per-round eps from Theorem 3's ``dp_epsilon``, sampling
+        rate from the realized cohort, accountant per ``dp_accountant``."""
+        return PrivacyLedger(
+            eps_per_round=self.dp_epsilon,
+            q=self.sampling_rate,
+            accountant=self.dp_accountant,
+        )
+
+    @property
     def bctrl(self) -> BControlConfig:
         return BControlConfig(self.b_mode, self.b_init)
 
@@ -217,6 +258,9 @@ class FLSimulation:
             functools.partial(_rounds.round_fn(self.ctx), self.ctx, self._params)
         )
         self.history: list[dict] = []
+        # One DP event is recorded per executed round; eps_spent in the
+        # history is the cumulative budget under cfg.dp_accountant.
+        self.ledger = cfg.ledger()
 
     # State views (the arrays live in self.state; these keep the original
     # attribute API used by tests and examples).
@@ -275,6 +319,11 @@ class FLSimulation:
 
     # -- driver --------------------------------------------------------------
 
+    @property
+    def eps_trajectory(self):
+        """Cumulative DP budget after each executed round (ledger view)."""
+        return self.ledger.trajectory()
+
     def evaluate(self) -> float:
         params = self.unravel(self.w_global)
         return float(self.acc_fn(params, self.test))
@@ -287,6 +336,7 @@ class FLSimulation:
             key, kb, kr = jax.random.split(key, 3)
             batches = self._round_batches(kb)
             self.state, metrics = self._round(kr, self.state, batches)
+            self.ledger.record_round()
             if (t + 1) % eval_every == 0 or t == rounds - 1:
                 acc = self.evaluate()
                 rec = {
@@ -294,11 +344,13 @@ class FLSimulation:
                     "acc": acc,
                     "loss": float(metrics["loss"]),
                     "b": float(self.state.b.b),
+                    "eps_spent": self.ledger.eps_spent,
                 }
                 self.history.append(rec)
                 if verbose:
                     print(
                         f"[{cfg.aggregator}|{cfg.attack}|byz={cfg.byz_frac:.0%}] "
-                        f"round {t+1}: acc={acc:.4f} loss={rec['loss']:.4f} b={rec['b']:.5f}"
+                        f"round {t+1}: acc={acc:.4f} loss={rec['loss']:.4f} "
+                        f"b={rec['b']:.5f} eps={rec['eps_spent']:.4g}"
                     )
         return self.history

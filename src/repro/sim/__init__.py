@@ -6,6 +6,7 @@ trajectories with mean ± CI from the returned :class:`CampaignResult`.
 See ``benchmarks/table1_byzantine.py`` for the canonical usage."""
 
 from .campaign import (
+    ACCOUNTING_FIELDS,
     VMAP_FIELDS,
     CampaignSpec,
     CellSpec,
@@ -16,6 +17,7 @@ from .campaign import (
 from .metrics import CampaignResult, CellResult, mean_ci
 
 __all__ = [
+    "ACCOUNTING_FIELDS",
     "VMAP_FIELDS",
     "CampaignSpec",
     "CellSpec",

@@ -47,6 +47,7 @@ from .metrics import CampaignResult, CellResult
 
 __all__ = [
     "VMAP_FIELDS",
+    "ACCOUNTING_FIELDS",
     "Task",
     "CellSpec",
     "CampaignSpec",
@@ -65,6 +66,11 @@ VMAP_FIELDS = frozenset(
     {"lr", "momentum", "lam", "b_init", "attack", "seed",
      "async_latency", "staleness_decay"}
 )
+
+# FLConfig fields that never enter the compiled program at all — pure
+# host-side bookkeeping (the DP accountant only shapes the reported
+# eps_spent trajectory). Cells differing solely here share one program.
+ACCOUNTING_FIELDS = frozenset({"dp_accountant"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,7 +139,7 @@ def group_signature(cfg: FLConfig) -> tuple:
     return tuple(
         getattr(cfg, f.name)
         for f in dataclasses.fields(FLConfig)
-        if f.name not in VMAP_FIELDS
+        if f.name not in VMAP_FIELDS and f.name not in ACCOUNTING_FIELDS
     )
 
 
@@ -244,12 +250,19 @@ def run_campaign(
         traj = {m: np.asarray(v)[:n] for m, v in traj.items()}
         n_seeds = len(spec.seeds)
         for j, i in enumerate(idxs):
+            metrics = {
+                m: v[j * n_seeds : (j + 1) * n_seeds] for m, v in traj.items()
+            }
+            # Cumulative DP budget under the cell's accountant — closed
+            # form on the host (accounting never enters the trace), seed-
+            # independent, so the trajectory is tiled across the seed axis
+            # like any other first-class metric.
+            eps_traj = cfgs[i].ledger().trajectory(cfgs[i].rounds)
+            metrics["eps_spent"] = np.tile(eps_traj[None, :], (n_seeds, 1))
             cell_results[i] = CellResult(
                 name=spec.cells[i].name,
                 overrides=dict(spec.cells[i].overrides),
-                metrics={
-                    m: v[j * n_seeds : (j + 1) * n_seeds] for m, v in traj.items()
-                },
+                metrics=metrics,
             )
         group_stats.append(
             {"cells": [spec.cells[i].name for i in idxs], "wall_s": wall}

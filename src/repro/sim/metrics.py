@@ -4,7 +4,11 @@ A campaign run produces, per (cell, seed), the full per-round metric
 trajectories recorded by :func:`repro.fl.rounds.run_rounds` — test
 accuracy, mean local loss, the dynamic-b value, and ``theta_mse`` (the
 aggregation error against the true mean of the uploaded updates, the
-quantity Theorem 1 bounds at O(1/M)). :class:`CampaignResult` groups them
+quantity Theorem 1 bounds at O(1/M)) — plus the host-side ``eps_spent``
+trajectory: the cumulative DP budget after each round under the cell's
+``dp_accountant`` (:class:`repro.core.PrivacyLedger`; seed-independent,
+tiled across the seed axis, so it rides the same CellResult/JSON paths
+as every measured metric). :class:`CampaignResult` groups them
 by cell, summarizes across seeds as mean ± normal-approximation CI, and
 serializes to the same JSON artifact structure ``benchmarks/run.py``
 writes (so CI jobs can upload campaign JSON next to benchmark JSON);
@@ -60,6 +64,13 @@ class CellResult:
     def trajectory(self, metric: str = "acc") -> tuple[np.ndarray, np.ndarray]:
         """Per-round (mean, ci_half_width) across seeds."""
         return mean_ci(self.metrics[metric], axis=0)
+
+    def eps_spent(self) -> float:
+        """Cumulative DP budget at the last round (0.0 for non-DP cells or
+        results predating the privacy ledger)."""
+        if "eps_spent" not in self.metrics:
+            return 0.0
+        return self.final("eps_spent")[0]
 
     def mean_over_rounds(self, metric: str, tail: int | None = None) -> float:
         """Seed-and-round mean of a metric (optionally last ``tail`` rounds)."""

@@ -150,6 +150,20 @@ class TestTheorem3:
         pl = float(privacy_loss(delta_a, delta_b, b))
         assert pl <= eps * 1.0001
 
+    def test_privacy_loss_finite_at_range_boundary(self):
+        """Regression: delta = +-b exactly drives binarize_prob to {0, 1};
+        the empirical loss must clamp, not diverge to inf/NaN."""
+        b = jnp.full((3,), 0.02)
+        pl = privacy_loss(
+            jnp.array([0.02, -0.02, 0.02]),
+            jnp.array([-0.02, 0.02, 0.01]),
+            b,
+        )
+        assert bool(jnp.isfinite(pl))
+        # one-sided: only one update on the boundary
+        pl1 = privacy_loss(jnp.array([0.02]), jnp.array([0.0]), b[:1])
+        assert bool(jnp.isfinite(pl1))
+
     def test_smaller_eps_needs_larger_b(self):
         floors = [
             float(dp_b_floor(jnp.float32(0.01), DPConfig(e, 2e-4)))
