@@ -3,9 +3,11 @@ parameter b (Byzantine- and DP-free, as in the paper's ablation).
 
 Declared as a 3-cell ``CampaignSpec`` over the ``b_mode`` axis. ``b_mode``
 shapes the compiled program (oracle computes a per-coordinate max), so the
-engine runs one grouped program per mode, each scanned over rounds —
-still one declaration, no per-cell Python driver::
+planner lowers this to one program per mode, each scanned over rounds and
+AOT-compiled through the process-wide cache — still one declaration, no
+per-cell Python driver::
 
+    plan = plan_campaign(fig3_spec(rounds))     # 3 cells -> 3 programs
     result = run_campaign(fig3_spec(rounds), common.campaign_task)
     result.cell("dynamic").metrics["b"]   # (n_seeds, rounds) b trajectory
 """
@@ -14,7 +16,7 @@ from __future__ import annotations
 
 from .common import ROUNDS, campaign_task, emit  # sets sys.path first
 
-from repro.sim import CampaignSpec, CellSpec, run_campaign  # noqa: E402
+from repro.sim import CampaignSpec, CellSpec, plan_campaign, run_campaign  # noqa: E402
 
 MODES = ("dynamic", "fixed", "oracle")
 
@@ -31,7 +33,8 @@ def fig3_spec(rounds: int | None = None) -> CampaignSpec:
 
 
 def main(rounds: int | None = None) -> dict:
-    result = run_campaign(fig3_spec(rounds), campaign_task)
+    spec = fig3_spec(rounds)
+    result = run_campaign(spec, campaign_task, plan=plan_campaign(spec))
     out = {}
     for name, us, _derived in result.emit_rows("fig3_b"):
         cell = result.cell(name.removeprefix("fig3_b_"))

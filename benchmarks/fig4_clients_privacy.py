@@ -3,11 +3,14 @@ validates the O(1/M) error decay reaching FedAvg; (right) accuracy vs
 privacy loss eps at fixed M.
 
 One ``CampaignSpec`` covers both panels: an (M x aggregator) sweep plus a
-privacy-eps sweep. M changes array shapes and eps changes the compiled DP
-branch, so every cell here lands in its own execution group — this is the
-campaign engine's grouped fallback, still one declaration and one result
-object::
+privacy-eps sweep. Since the planner (``repro.sim.plan``), the M-sweep is
+**fused**: every ``n_clients`` value of one aggregator pads to the sweep
+max and runs as ONE compiled program (M is traced via the active-client
+mask), so the grid compiles one program per aggregator plus one per eps
+(eps changes the compiled DP branch) instead of one per cell::
 
+    plan = plan_campaign(fig4_spec(rounds))
+    plan.describe()   # 11 cells -> 5 programs (2 fused M-sweeps)
     result = run_campaign(fig4_spec(rounds), common.campaign_task)
     result.cell("M=20_probit").metrics["theta_mse"]  # O(1/M) per round
 """
@@ -16,7 +19,7 @@ from __future__ import annotations
 
 from .common import ROUNDS, campaign_task, emit  # sets sys.path first
 
-from repro.sim import CampaignSpec, CellSpec, run_campaign  # noqa: E402
+from repro.sim import CampaignSpec, CellSpec, plan_campaign, run_campaign  # noqa: E402
 
 CLIENTS = (5, 10, 20, 40)
 EPSILONS = (1.0, 0.1, 0.01)
@@ -39,7 +42,18 @@ def fig4_spec(rounds: int | None = None) -> CampaignSpec:
 
 
 def main(rounds: int | None = None) -> dict:
-    result = run_campaign(fig4_spec(rounds), campaign_task)
+    spec = fig4_spec(rounds)
+    plan = plan_campaign(spec)
+    # Acceptance: the whole probit M-sweep is one fused compiled program
+    # (same for the fedavg sweep) — the planner's reason to exist.
+    m_sweep = {f"M={m}_probit" for m in CLIENTS}
+    fused_groups = [
+        {spec.cells[i].name for i in g.cell_idx}
+        for g in plan.groups
+        if g.fused
+    ]
+    assert any(m_sweep <= names for names in fused_groups), plan.describe()
+    result = run_campaign(spec, campaign_task, plan=plan)
     rows = {name: (us, derived) for name, us, derived in result.emit_rows("fig4")}
     out: dict = {"clients": {}, "privacy": {}}
     for m in CLIENTS:

@@ -22,6 +22,7 @@ def main() -> None:
 
     from . import fig3_dynamic_b, fig4_clients_privacy, table1_byzantine
     from . import fig_async_staleness, fig_privacy_amplification
+    from . import fig_campaign_throughput
     from . import theorem_rates, kernels_micro, roofline
 
     results = {}
@@ -40,6 +41,8 @@ def main() -> None:
     results["fig_async"] = fig_async_staleness.main(rounds)
     print("# --- Privacy amplification: participation x eps x aggregator ---")
     results["fig_privacy"] = fig_privacy_amplification.main(rounds)
+    print("# --- Campaign throughput: cells/sec vs virtual device count ---")
+    results["fig_throughput"] = fig_campaign_throughput.main(rounds)
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -11,9 +11,11 @@ Beyond the paper's four attacks the registry carries two adaptive
 adversaries from the Byzantine-ML literature (both colluding, both aware of
 the honest updates):
 
-* ``alie``  — "A Little Is Enough" [Baruch et al. 2019]-style variance
-  attack: Byzantines upload ``mean - z * std`` of the honest updates, a
-  perturbation sized to hide inside the honest spread.
+* ``alie``  — "A Little Is Enough" [Baruch et al. 2019] variance attack:
+  Byzantines upload ``mean - z * std`` of the honest updates, with ``z``
+  the breakdown-point normal quantile implied by the (cohort size,
+  Byzantine count) pair (:func:`alie_z`) — the largest perturbation that
+  still hides inside the honest spread for a majority-based defense.
 * ``ipm``   — inner-product manipulation [Xie et al. 2020]: Byzantines
   upload a negatively scaled honest mean, targeting
   ``<aggregate, true mean> < 0``.
@@ -51,12 +53,15 @@ dispatches via ``lax.switch``, which is what lets the campaign engine
 from __future__ import annotations
 
 import dataclasses
+import functools
+import statistics
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "alie_z",
     "get_attack",
     "ATTACKS",
     "ATTACK_IDS",
@@ -100,20 +105,48 @@ def _sample_duplicate(key, updates, n_byz):
     return updates.at[:n_byz].set(jnp.broadcast_to(updates[n_byz], updates[:n_byz].shape))
 
 
-# z for the ALIE perturbation: the original attack solves for the largest z
-# keeping the malicious update inside the honest majority's acceptance
-# region (a normal quantile in M and n_byz); a fixed z = 1 sits inside that
-# region for every (M, byz_frac <= 0.45) cell in the campaign grids and
-# keeps the attack shape-polymorphic.
-_ALIE_Z = 1.0
+@functools.lru_cache(maxsize=None)
+def alie_z(n: int, n_byz: int) -> float:
+    """The ALIE perturbation size ``z`` from the breakdown-point quantile.
+
+    Baruch et al. (2019) pick the largest ``z`` such that the malicious
+    update ``mean - z * std`` still looks like a plausible honest worker to
+    a majority-based defense: with ``n`` workers of which ``m = n_byz``
+    collude, the attackers need ``s = floor(n/2 + 1) - m`` honest
+    *supporters* (workers even further from the mean than the attack
+    point) to hide inside the majority, giving::
+
+        z = Phi^{-1}((n - m - s) / (n - m))
+
+    where ``Phi`` is the standard normal CDF. The quantile is clamped to
+    ``[1/2, 1)`` — a ratio below 1/2 means the Byzantine cohort cannot
+    recruit a majority at any non-negative ``z`` (the breakdown point is
+    not reached), so the attack degrades to uploading the honest mean
+    (``z = 0``), and ``n_byz = 0`` trivially maps there too.
+
+    Both arguments are static shapes, so the quantile is evaluated on the
+    host (stdlib ``NormalDist``) and folds into the trace as a constant —
+    an (M, byz_frac) campaign axis still vmaps, each cohort size compiling
+    with its own pinned ``z``.
+    """
+    if n_byz <= 0 or n - n_byz <= 0:
+        return 0.0
+    s = n // 2 + 1 - n_byz
+    frac = (n - n_byz - s) / (n - n_byz)
+    if frac <= 0.5:
+        return 0.0
+    frac = min(frac, 1.0 - 1e-9)
+    return float(statistics.NormalDist().inv_cdf(frac))
 
 
 def _alie(key, updates, n_byz):
-    """ALIE-style variance attack: mean - z * std of the honest updates."""
+    """ALIE variance attack [Baruch et al. 2019]: ``mean - z * std`` of the
+    honest updates, with ``z`` the breakdown-point quantile implied by the
+    (cohort size, Byzantine count) pair — see :func:`alie_z`."""
     honest = updates[n_byz:]
     mu = jnp.mean(honest, axis=0)
     sigma = jnp.std(honest, axis=0)
-    evil = mu - _ALIE_Z * sigma
+    evil = mu - alie_z(updates.shape[0], n_byz) * sigma
     return updates.at[:n_byz].set(jnp.broadcast_to(evil, updates[:n_byz].shape))
 
 

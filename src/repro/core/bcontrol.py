@@ -50,9 +50,24 @@ def loss_bit(loss_before: jax.Array, loss_after: jax.Array) -> jax.Array:
     return jnp.where(loss_after < loss_before, jnp.int8(1), jnp.int8(-1))
 
 
-def update_b(state: BState, bits: jax.Array, cfg: BControlConfig) -> BState:
-    """Majority-vote the loss bits and rescale b (jit-safe)."""
-    vote = jnp.sum(bits.astype(jnp.float32))
+def update_b(
+    state: BState,
+    bits: jax.Array,
+    cfg: BControlConfig,
+    weights: jax.Array | None = None,
+) -> BState:
+    """Majority-vote the loss bits and rescale b (jit-safe).
+
+    ``weights`` (one per bit) restricts the vote to a weighted sub-cohort —
+    the campaign engine's fused heterogeneous-M groups pass the 0/1
+    active-client mask so padded clients cast no vote. A float sum of
+    masked ±1 bits is exact below 2**24, so the masked vote equals the
+    unpadded integer vote value-for-value.
+    """
+    votes = bits.astype(jnp.float32)
+    if weights is not None:
+        votes = votes * weights
+    vote = jnp.sum(votes)
     factor = jnp.where(vote > 0, cfg.up, cfg.down)
     if cfg.mode == "fixed":
         factor = jnp.float32(1.0)

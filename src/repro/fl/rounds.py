@@ -75,6 +75,7 @@ __all__ = [
     "init_async_state",
     "init_run_state",
     "cell_params",
+    "client_mask",
     "round_batches",
     "fl_round",
     "async_fl_round",
@@ -142,6 +143,13 @@ class CellParams:
     latency: Any  # f32 mean upload latency in rounds; P(arrive) = 1/(1+lat)
     staleness_decay: Any  # f32 age-weight exponent: w(age) = (1+age)^(-decay)
     straggler_gate: Any  # bool: arm the straggler timing adversary
+    # Number of *real* clients in this cell. Only read when the context is
+    # ``masked`` (a fused heterogeneous-M campaign group): the client axis
+    # is padded to the group max and rows >= m_active are masked out of
+    # the estimate, the b-vote, and the metrics — M moves from a static
+    # shape to a traced value. Unmasked contexts ignore it entirely, so
+    # the single-config path compiles the exact pre-refactor program.
+    m_active: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +171,11 @@ class RoundContext:
     client_y: jax.Array  # (n_clients, per_client)
     test: dict
     flip_n: int  # rows bit-flipped on the wire when a cell's flip_gate is on
+    # True for fused heterogeneous-M campaign groups: the client axis is
+    # padded to the group max and every round threads the 0/1 active-client
+    # mask (rows < CellParams.m_active) through the estimate, the b-vote,
+    # and the metrics. False compiles the exact unmasked program.
+    masked: bool = False
 
     @property
     def d(self) -> int:
@@ -179,17 +192,25 @@ def make_context(
     test: dict,
     *,
     wire_flip: bool | None = None,
+    masked: bool = False,
 ) -> RoundContext:
     """Resolve a config + task into a RoundContext.
 
     ``wire_flip`` arms the static wire-flip slot even when ``cfg.attack``
     itself is not ``bit_flip`` — the campaign engine sets it when *any*
     cell in a vmapped group is a bit_flip cell (per-cell ``flip_gate``
-    then selects).
+    then selects). ``masked`` marks a fused heterogeneous-M context whose
+    client axis is padded (``cfg.n_clients`` is the group max; the real
+    per-cell M arrives as the traced ``CellParams.m_active``).
     """
     w0, unravel = ravel_pytree(init_params)
     if wire_flip is None:
         wire_flip = is_wire_attack(cfg.attack)
+    if masked and (cfg.async_buffer or cfg.participation < 1.0):
+        raise ValueError(
+            "masked (fused heterogeneous-M) contexts require synchronous "
+            "rounds at full participation; see repro.sim.plan.fusable"
+        )
     n_byz = int(cfg.n_active * cfg.byz_frac)
     return RoundContext(
         cfg=cfg,
@@ -202,6 +223,7 @@ def make_context(
         client_y=jnp.asarray(client_y),
         test={k: jnp.asarray(v) for k, v in test.items()},
         flip_n=n_byz if wire_flip else 0,
+        masked=masked,
     )
 
 
@@ -269,7 +291,22 @@ def cell_params(cfg) -> CellParams:
         latency=cfg.async_latency,
         staleness_decay=cfg.staleness_decay,
         straggler_gate=is_timing_attack(cfg.attack),
+        m_active=cfg.n_active,
     )
+
+
+def client_mask(ctx: RoundContext, params: CellParams) -> jax.Array | None:
+    """The 0/1 active-client row mask of a masked (fused) context.
+
+    ``None`` for unmasked contexts — every weighted path downstream
+    (estimate, b-vote, metric means) treats ``None`` as "use the exact
+    unweighted ops", preserving bit-exactness of single-M execution.
+    """
+    if not ctx.masked:
+        return None
+    return (
+        jnp.arange(ctx.cfg.n_active) < jnp.asarray(params.m_active)
+    ).astype(jnp.float32)
 
 
 def round_batches(ctx: RoundContext, key: jax.Array) -> dict:
@@ -333,12 +370,17 @@ def _client_uploads(ctx, params, key, state, batches):
     return sel, w_new, loss_before, loss_after, deltas_att, wire, res_new
 
 
-def _finish_round(ctx, state, sel, w_new, loss_before, loss_after, res_new, theta, deltas_att, state_cls, **extra):
+def _finish_round(ctx, state, sel, w_new, loss_before, loss_after, res_new, theta, deltas_att, state_cls, mask=None, **extra):
     """Server epilogue shared by both variants: global step, b-control,
-    state write-back, metrics."""
+    state write-back, metrics.
+
+    ``mask`` (fused heterogeneous-M groups only) is the 0/1 active-client
+    row mask: padded clients cast no b-vote and drop out of the loss /
+    theta_mse means. ``None`` keeps the exact unmasked ops.
+    """
     cfg = ctx.cfg
     bits = jax.vmap(loss_bit)(loss_before, loss_after)
-    b_new = update_b(state.b, bits, cfg.bctrl)
+    b_new = update_b(state.b, bits, cfg.bctrl, weights=mask)
     new_state = state_cls(
         w_global=state.w_global + theta,
         w_locals=state.w_locals.at[sel].set(w_new),
@@ -346,10 +388,17 @@ def _finish_round(ctx, state, sel, w_new, loss_before, loss_after, res_new, thet
         residuals=state.residuals.at[sel].set(res_new),
         **extra,
     )
+    if mask is None:
+        loss = jnp.mean(loss_after)
+        delta_mean = jnp.mean(deltas_att, axis=0)
+    else:
+        m_eff = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(loss_after * mask) / m_eff
+        delta_mean = jnp.sum(deltas_att * mask[:, None], axis=0) / m_eff
     metrics = {
-        "loss": jnp.mean(loss_after),
+        "loss": loss,
         "b": b_new.b,
-        "theta_mse": jnp.mean((theta - jnp.mean(deltas_att, axis=0)) ** 2),
+        "theta_mse": jnp.mean((theta - delta_mean) ** 2),
     }
     return new_state, metrics
 
@@ -368,14 +417,21 @@ def fl_round(
     ``theta_mse`` — the mean squared error of the aggregated ``theta_hat``
     against the true mean of the (post-attack) uploaded updates, i.e. the
     pure aggregation error the paper's Theorem 1 bounds at O(1/M).
+
+    Under a ``masked`` context (fused heterogeneous-M campaign group) the
+    active-client mask rides the *weighted* count path of PR 3 into the
+    Eq. 13 vote counts: ``N_i^w`` sums only real clients and the effective
+    cohort ``M^w = m_active`` is traced, so one compiled program serves
+    every M in the group while the wire format is unchanged.
     """
     sel, w_new, loss_before, loss_after, deltas_att, wire, res_new = (
         _client_uploads(ctx, params, key, state, batches)
     )
-    theta = ctx.pipeline.estimate(wire)
+    mask = client_mask(ctx, params)
+    theta = ctx.pipeline.estimate(wire, weights=mask)
     return _finish_round(
         ctx, state, sel, w_new, loss_before, loss_after, res_new,
-        theta, deltas_att, RoundState,
+        theta, deltas_att, RoundState, mask=mask,
     )
 
 

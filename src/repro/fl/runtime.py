@@ -86,8 +86,11 @@ class FLConfig:
     # DP accountant for the run's PrivacyLedger: "subsampled" (default —
     # per-round eps amplified by the sampling rate q = m/M before basic
     # composition; q = 1 is bit-identical to "basic"), "basic"
-    # (conservative sum), or "advanced" (DRV strong composition at
-    # delta_slack = 1e-5). Host-side bookkeeping only — never traced.
+    # (conservative sum), "advanced" (DRV strong composition at
+    # delta_slack = 1e-5), or "renyi" (exact randomized-response RDP
+    # composed in the Rényi domain, converted at delta_slack — dominates
+    # both basic and advanced on every trajectory). Host-side bookkeeping
+    # only — never traced.
     dp_accountant: str = "subsampled"
     # BEYOND-PAPER: buffered-asynchronous rounds (the ROADMAP's
     # async/straggler item). 0 = the paper's synchronous protocol; B > 0

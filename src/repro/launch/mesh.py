@@ -32,3 +32,16 @@ def make_host_mesh(model: int = 1):
     """Degenerate 1-device mesh for CPU integration tests of the
     distributed code path (same axis names as production)."""
     return make_mesh((1, model), ("data", "model"))
+
+
+def make_campaign_mesh(n_devices: int | None = None):
+    """1-D data mesh for campaign batch sharding.
+
+    The campaign executor (``repro.sim.campaign``) lays each plan group's
+    (cell, seed) batch axis on this mesh — cells are embarrassingly
+    parallel, so a pure data mesh over all local devices is the right
+    placement. Cross-host campaigns would swap this for a slice of
+    :func:`make_production_mesh`'s "data" axis (ROADMAP follow-on).
+    """
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return make_mesh((n,), ("data",))

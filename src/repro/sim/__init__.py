@@ -1,9 +1,12 @@
 """Scenario-campaign engine: vmapped grids of FL runs with statistics.
 
 Declare a grid with :class:`CampaignSpec` (base FLConfig + cell overrides
-+ seeds), execute it with :func:`run_campaign`, and read per-cell
-trajectories with mean ± CI from the returned :class:`CampaignResult`.
-See ``benchmarks/table1_byzantine.py`` for the canonical usage."""
++ seeds), execute it with :func:`run_campaign` (which lowers the spec
+through :func:`plan_campaign` into a :class:`CampaignPlan` — fused
+heterogeneous-M groups, AOT-compile caching, overlapped dispatch, device
+sharding), and read per-cell trajectories with mean ± CI from the
+returned :class:`CampaignResult`. See ``benchmarks/table1_byzantine.py``
+and ``benchmarks/fig4_clients_privacy.py`` for the canonical usage."""
 
 from .campaign import (
     ACCOUNTING_FIELDS,
@@ -15,6 +18,15 @@ from .campaign import (
     run_campaign,
 )
 from .metrics import CampaignResult, CellResult, mean_ci
+from .plan import (
+    CampaignPlan,
+    CompileCache,
+    PlanGroup,
+    default_compile_cache,
+    fusable,
+    fused_signature,
+    plan_campaign,
+)
 
 __all__ = [
     "ACCOUNTING_FIELDS",
@@ -27,4 +39,11 @@ __all__ = [
     "CampaignResult",
     "CellResult",
     "mean_ci",
+    "CampaignPlan",
+    "PlanGroup",
+    "CompileCache",
+    "default_compile_cache",
+    "fusable",
+    "fused_signature",
+    "plan_campaign",
 ]

@@ -1,32 +1,43 @@
-"""Vectorized scenario-campaign engine: whole grids as one computation.
+"""Scenario-campaign engine: plan, then execute.
 
 A :class:`CampaignSpec` declares a grid of FL scenarios — a base
-:class:`~repro.fl.FLConfig` plus per-cell overrides and a seed list — and
-:func:`run_campaign` executes the entire grid through the functional round
-core (:mod:`repro.fl.rounds`) instead of sequential Python-looped
-:class:`~repro.fl.FLSimulation` runs:
+:class:`~repro.fl.FLConfig` plus per-cell overrides and a seed list. Since
+the planner/executor split, execution is two explicit stages:
 
-1. Cells are **grouped** by their static trace signature (every FLConfig
-   field that shapes the compiled program: client count, aggregator,
-   participation, DP, b-mode, rounds, ...). One group == one XLA program.
-2. Within a group, the engine **vmaps** over all (cell, seed) pairs at
-   once. Cells may differ in the *traced* scenario fields
-   (:data:`VMAP_FIELDS`): learning rate, momentum, prox weight, b_init,
-   the seed, the async arrival latency and staleness decay, and the
-   attack — delta-level attacks dispatch through ``lax.switch`` on a
-   traced id, and the ``bit_flip`` wire adversary and the ``straggler``
-   timing adversary are traced gates, so a full attack axis (timing
-   included) rides a single vmapped batch.
-3. Groups whose shapes or static fields differ (e.g. an M-sweep changing
-   ``n_clients``) **fall back to grouped execution**: one compiled
-   program per group, still scanned over rounds and vmapped over seeds.
-4. With ``shard=True`` and more than one device, the (cell, seed) batch
-   axis is sharded across devices via the ``launch/mesh`` utilities —
-   campaign cells are embarrassingly parallel.
+**Plan** (:func:`repro.sim.plan.plan_campaign`) lowers the spec into a
+:class:`~repro.sim.plan.CampaignPlan` IR — one :class:`PlanGroup` per
+compiled program:
+
+1. Cells bucket by their **static trace signature** (every FLConfig field
+   that shapes the compiled program). Cells differing only in *traced*
+   scenario fields (:data:`VMAP_FIELDS` — lr, momentum, prox weight,
+   b_init, seed, async latency/decay, and the attack, incl. the traced
+   bit_flip / straggler gates) ride one vmapped batch.
+2. Cells that are :func:`~repro.sim.plan.fusable` additionally **fuse
+   across differing** ``n_clients``: the client axis pads to the group max
+   and each cell's real M rides the traced ``CellParams.m_active``; the
+   0/1 active-client mask folds into the Eq.-13 vote counts via the
+   weighted-count path, wire format unchanged. An M-sweep — the paper's
+   O(1/M) axis — is then ONE program instead of one per M.
+3. ``shard=True`` makes placement a plan property: each group's
+   (cell, seed) batch axis is laid out on a 1-D ``launch/mesh`` data mesh
+   over all local devices (campaign cells are embarrassingly parallel).
+
+**Execute** (:func:`run_campaign`) walks the plan:
+
+* programs are AOT-compiled through a process-wide
+  :class:`~repro.sim.plan.CompileCache` keyed by (signature, shapes) via
+  ``jit(...).lower().compile()`` — repeated campaigns skip recompiles;
+* dispatch is **overlapped**: every group's computation launches before
+  the first ``block_until_ready``, so host lowering and device compute
+  pipeline instead of serializing;
+* per-group execution accounting lands in ``CampaignResult.groups`` (and
+  its JSON): wall/compile seconds, cache hit, ``n_devices``,
+  ``cells_per_sec``, and padded-vs-real element counts.
 
 At a fixed seed each cell reproduces ``FLSimulation`` exactly (same RNG
-schedule, same per-round math — see ``tests/test_campaign.py``), so grids
-previously run as benchmark loops are drop-in replaceable.
+schedule, same per-round math — see ``tests/test_campaign.py``); fused
+and per-group execution agree to jit tolerance (``tests/test_plan.py``).
 """
 
 from __future__ import annotations
@@ -34,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+import warnings
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
@@ -44,6 +56,13 @@ from ..core import is_timing_attack, is_wire_attack
 from ..fl import FLConfig
 from ..fl import rounds as R
 from .metrics import CampaignResult, CellResult
+from .plan import (
+    CampaignPlan,
+    CompileCache,
+    PlanGroup,
+    default_compile_cache,
+    plan_campaign,
+)
 
 __all__ = [
     "VMAP_FIELDS",
@@ -62,6 +81,8 @@ __all__ = [
 # gate is a traced bool). ``async_buffer`` is deliberately NOT here — it
 # shapes the buffer, so sync and async cells compile separate programs,
 # but both kinds group and run inside one ``run_campaign`` call.
+# ``n_clients`` is not here either: it is a *shape* — but the planner can
+# still fuse an M-sweep by padding + masking (see repro.sim.plan).
 VMAP_FIELDS = frozenset(
     {"lr", "momentum", "lam", "b_init", "attack", "seed",
      "async_latency", "staleness_decay"}
@@ -143,7 +164,7 @@ def group_signature(cfg: FLConfig) -> tuple:
     )
 
 
-def _batched_inputs(ctx, cfgs: list[FLConfig], seeds: Sequence[int]):
+def _batched_inputs(ctx, cfgs: list[FLConfig], seeds: Sequence[int], *, masked: bool = False):
     """Stack per-(cell, seed) CellParams, PRNG keys, and initial states."""
     elems = [(cfg, s) for cfg in cfgs for s in seeds]
     params = R.CellParams(
@@ -163,6 +184,13 @@ def _batched_inputs(ctx, cfgs: list[FLConfig], seeds: Sequence[int]):
         straggler_gate=jnp.asarray(
             [is_timing_attack(c.attack) for c, _ in elems], jnp.bool_
         ),
+        # Real (unpadded) client count; only masked (fused) programs read
+        # it. None keeps the unmasked CellParams pytree structure.
+        m_active=(
+            jnp.asarray([c.n_active for c, _ in elems], jnp.int32)
+            if masked
+            else None
+        ),
     )
     keys = jnp.stack([jax.random.PRNGKey(s) for _, s in elems])
     b_inits = jnp.asarray([c.b_init for c, _ in elems], jnp.float32)
@@ -170,21 +198,39 @@ def _batched_inputs(ctx, cfgs: list[FLConfig], seeds: Sequence[int]):
     return params, keys, states
 
 
+_WARNED_SINGLE_DEVICE = False
+
+
 def _shard_over_devices(trees, n: int):
     """Shard the leading (cell, seed) axis over all local devices.
 
-    Returns (possibly padded) trees plus the padded size; a no-op on a
-    single device. Padding repeats the last element — padded results are
-    sliced away by the caller.
+    Returns (possibly padded) trees plus the padded size and the device
+    count. On a single device sharding cannot do anything — that case
+    warns once per process (it usually means the
+    ``--xla_force_host_platform_device_count`` flag the caller expected is
+    not set) and returns the inputs untouched; the executor still reports
+    ``n_devices=1`` in the group stats. Padding repeats the last element —
+    padded results are sliced away by the caller.
     """
+    global _WARNED_SINGLE_DEVICE
     devices = jax.devices()
-    if len(devices) <= 1:
-        return trees, n
-    from ..launch.mesh import make_mesh
-
     n_dev = len(devices)
+    if n_dev <= 1:
+        if not _WARNED_SINGLE_DEVICE:
+            _WARNED_SINGLE_DEVICE = True
+            warnings.warn(
+                "run_campaign(shard=True) is a no-op: only one local device "
+                "is visible. For CPU scaling runs set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N before importing "
+                "jax (see benchmarks/fig_campaign_throughput.py).",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        return trees, n, 1, None
+    from ..launch.mesh import make_campaign_mesh
+
     n_pad = ((n + n_dev - 1) // n_dev) * n_dev
-    mesh = make_mesh((n_dev,), ("data",))
+    mesh = make_campaign_mesh(n_dev)
     sharding = jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data")
     )
@@ -194,62 +240,240 @@ def _shard_over_devices(trees, n: int):
             x = jnp.concatenate([x, jnp.repeat(x[-1:], n_pad - n, axis=0)])
         return jax.device_put(x, sharding)
 
-    return jax.tree.map(pad_leaf, trees), n_pad
+    return jax.tree.map(pad_leaf, trees), n_pad, n_dev, mesh
+
+
+def _pad_clients(arr: np.ndarray, m_pad: int) -> np.ndarray:
+    """Pad the leading client axis to ``m_pad`` with wrap-around rows.
+
+    Padded clients train on (copies of) real data so every per-row value
+    stays finite; the active-client mask keeps them out of the estimate,
+    the b-vote, and the metrics, and their w_local/residual rows are never
+    read back per cell.
+    """
+    arr = np.asarray(arr)
+    if arr.shape[0] == m_pad:
+        return arr
+    return arr[np.arange(m_pad) % arr.shape[0]]
+
+
+def _task_leaves(task: Task, *, with_clients: bool) -> list:
+    """The task objects a compiled program bakes in as trace constants."""
+    leaves = list(jax.tree_util.tree_leaves(task.init_params))
+    leaves += [task.loss_fn, task.acc_fn]
+    leaves += list(jax.tree_util.tree_leaves(task.test))
+    if with_clients:
+        leaves += [task.client_x, task.client_y]
+    return leaves
+
+
+class _GroupFusionError(Exception):
+    """A fused group's cells turned out not to share a batchable task."""
+
+
+def _prepare_group(
+    group: PlanGroup,
+    cfgs: list[FLConfig],
+    spec: CampaignSpec,
+    task_fn: Callable[[FLConfig], Task],
+    *,
+    with_acc: bool,
+    shard: bool,
+    cache: CompileCache,
+):
+    """Build (vmapped fn, args, cache key) for one plan group.
+
+    For a fused group the per-cell client datasets are padded to
+    ``group.m_pad``, stacked once along a *cell* axis, and gathered inside
+    the program through a per-(cell, seed) index — client data becomes a
+    broadcast *argument* of the compiled program rather than a baked
+    constant (one executable serves every M) and is resident on device
+    exactly once regardless of the seed count. The representative cell
+    supplies the init params / loss / test set, which a fusable task
+    provider must keep M-independent (the benchmark harness does); a
+    shape mismatch raises :class:`_GroupFusionError` and the executor
+    falls back to per-signature execution for that group.
+    """
+    group_cfgs = [cfgs[i] for i in group.cell_idx]
+    wire_flip = any(is_wire_attack(c.attack) for c in group_cfgs)
+    n = len(group_cfgs) * len(spec.seeds)
+
+    if group.fused:
+        tasks = [task_fn(c) for c in group_cfgs]
+        rep = tasks[0]
+        cxs = [_pad_clients(t.client_x, group.m_pad) for t in tasks]
+        cys = [_pad_clients(t.client_y, group.m_pad) for t in tasks]
+        if len({c.shape for c in cxs}) > 1 or len({c.shape for c in cys}) > 1:
+            raise _GroupFusionError(
+                f"per-client data shapes differ across the fused M group "
+                f"{[spec.cells[i].name for i in group.cell_idx]}"
+            )
+        ctx_cfg = dataclasses.replace(group_cfgs[0], n_clients=group.m_pad)
+        ctx = R.make_context(
+            ctx_cfg, rep.init_params, rep.loss_fn, rep.acc_fn,
+            cxs[0], cys[0], rep.test, wire_flip=wire_flip, masked=True,
+        )
+        params, keys, states = _batched_inputs(
+            ctx, group_cfgs, spec.seeds, masked=True
+        )
+        # (n_cells, m_pad, ...) stacks, one row per CELL; each (cell,
+        # seed) batch element gathers its row via data_idx.
+        cx_all = jnp.asarray(np.stack(cxs))
+        cy_all = jnp.asarray(np.stack(cys))
+        data_idx = jnp.asarray(
+            np.repeat(np.arange(len(group_cfgs)), len(spec.seeds)), jnp.int32
+        )
+
+        def cell_fn(p, k, s, di, cx, cy):
+            c = dataclasses.replace(ctx, client_x=cx[di], client_y=cy[di])
+            return R.run_rounds(c, p, k, s, with_acc=with_acc)[1]
+
+        batched = (params, keys, states, data_idx)
+        bcast = (cx_all, cy_all)
+        in_axes = (0, 0, 0, 0, None, None)
+        task_fp = cache.task_fingerprint(_task_leaves(rep, with_clients=False))
+        keepalive = _task_leaves(rep, with_clients=False)
+    else:
+        task = task_fn(group_cfgs[0])
+        ctx = R.make_context(
+            group_cfgs[0], task.init_params, task.loss_fn, task.acc_fn,
+            task.client_x, task.client_y, task.test, wire_flip=wire_flip,
+        )
+        params, keys, states = _batched_inputs(ctx, group_cfgs, spec.seeds)
+
+        def cell_fn(p, k, s):
+            return R.run_rounds(ctx, p, k, s, with_acc=with_acc)[1]
+
+        batched = (params, keys, states)
+        bcast = ()
+        in_axes = (0, 0, 0)
+        task_fp = cache.task_fingerprint(_task_leaves(task, with_clients=True))
+        keepalive = _task_leaves(task, with_clients=True)
+
+    n_padded, n_dev = n, 1
+    if shard:
+        batched, n_padded, n_dev, mesh = _shard_over_devices(batched, n)
+        if mesh is not None and bcast:
+            # The cell-data stacks are not batch-sharded — replicate them.
+            replicated = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()
+            )
+            bcast = tuple(jax.device_put(x, replicated) for x in bcast)
+
+    key = (
+        group.signature, group.m_pad, group.fused, wire_flip,
+        with_acc, n_dev, task_fp,
+    )
+    fn = jax.vmap(cell_fn, in_axes=in_axes)
+    return fn, batched + bcast, key, keepalive, n, n_padded, n_dev
+
+
+def _demote_group(group: PlanGroup, cfgs: list[FLConfig]) -> list[PlanGroup]:
+    """Fallback for an unfusable-in-practice fused group: per-signature."""
+    sub: dict[tuple, list[int]] = {}
+    for i in group.cell_idx:
+        sub.setdefault(group_signature(cfgs[i]), []).append(i)
+    return [
+        PlanGroup(
+            signature=("static", *sig),
+            cell_idx=tuple(idxs),
+            m_pad=cfgs[idxs[0]].n_clients,
+            fused=False,
+        )
+        for sig, idxs in sub.items()
+    ]
 
 
 def run_campaign(
     spec: CampaignSpec,
     task_fn: Callable[[FLConfig], Task],
     *,
-    shard: bool = False,
+    shard: bool | None = None,
     with_acc: bool = True,
     verbose: bool = False,
+    fuse_m: bool | None = None,
+    plan: CampaignPlan | None = None,
+    compile_cache: CompileCache | None = None,
 ) -> CampaignResult:
-    """Execute a campaign grid; returns per-cell trajectories + timings.
+    """Plan (unless handed a plan) and execute a campaign grid.
 
     ``task_fn(cfg)`` supplies the task for a cell's config (called once
-    per group with a representative config — memoize inside if building
-    data is expensive). Group wall-clock includes compilation: that is the
-    honest comparison against sequential drivers, which also jit per run.
+    per group member for fused groups, once per group otherwise — memoize
+    inside if building data is expensive). ``fuse_m=False`` disables
+    heterogeneous-M fusion (the parity baseline); ``compile_cache``
+    defaults to the process-wide AOT cache, so repeated campaigns of the
+    same spec skip every lowering. When an explicit ``plan`` is handed in
+    it owns the ``shard``/``fuse_m`` decisions — passing a conflicting
+    flag alongside it is an error, not a silent override.
+
+    Execution is overlapped: all groups are compiled and *dispatched*
+    first, then collected in dispatch order. A group's ``wall_s``
+    therefore measures dispatch-to-ready (device compute overlaps across
+    groups); ``compile_s`` is the host-side lowering cost, zero on a cache
+    hit. Both land in ``CampaignResult.groups`` together with
+    ``n_devices``, ``cells_per_sec`` (real (cell, seed) elements per
+    wall-second), and the padded-vs-real element counts.
     """
+    if plan is None:
+        plan = plan_campaign(
+            spec,
+            fuse_m=True if fuse_m is None else fuse_m,
+            shard=bool(shard),
+        )
+    else:
+        for name, arg, planned in (
+            ("shard", shard, plan.shard), ("fuse_m", fuse_m, plan.fuse_m)
+        ):
+            if arg is not None and arg != planned:
+                raise ValueError(
+                    f"run_campaign({name}={arg}) conflicts with the explicit "
+                    f"plan ({name}={planned}); set it in plan_campaign() or "
+                    "drop the keyword"
+                )
+    cache = compile_cache if compile_cache is not None else default_compile_cache()
     cfgs = spec.configs()
-    groups: dict[tuple, list[int]] = {}
-    for i, cfg in enumerate(cfgs):
-        groups.setdefault(group_signature(cfg), []).append(i)
 
     t_start = time.perf_counter()
+    launched: list[dict] = []
+    worklist = list(plan.groups)
+    while worklist:
+        group = worklist.pop(0)
+        try:
+            fn, args, key, keepalive, n, n_padded, n_dev = _prepare_group(
+                group, cfgs, spec, task_fn,
+                with_acc=with_acc, shard=plan.shard, cache=cache,
+            )
+        except _GroupFusionError as e:
+            warnings.warn(
+                f"demoting fused campaign group to per-M execution: {e}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            worklist = _demote_group(group, cfgs) + worklist
+            continue
+        t0 = time.perf_counter()
+        hits_before = cache.hits
+        compiled = cache.compile(key, fn, args, keepalive=keepalive)
+        t_compile = time.perf_counter() - t0
+        t_dispatch = time.perf_counter()
+        out = compiled(*args)
+        launched.append(
+            dict(
+                group=group, out=out, n=n, n_padded=n_padded, n_dev=n_dev,
+                t_dispatch=t_dispatch, compile_s=t_compile,
+                cache_hit=cache.hits > hits_before,
+            )
+        )
+
     cell_results: dict[int, CellResult] = {}
     group_stats: list[dict] = []
-    for idxs in groups.values():
-        group_cfgs = [cfgs[i] for i in idxs]
-        cfg0 = group_cfgs[0]
-        task = task_fn(cfg0)
-        wire_flip = any(is_wire_attack(c.attack) for c in group_cfgs)
-        ctx = R.make_context(
-            cfg0,
-            task.init_params,
-            task.loss_fn,
-            task.acc_fn,
-            task.client_x,
-            task.client_y,
-            task.test,
-            wire_flip=wire_flip,
-        )
-        params, keys, states = _batched_inputs(ctx, group_cfgs, spec.seeds)
-        n = len(group_cfgs) * len(spec.seeds)
-        if shard:
-            (params, keys, states), _ = _shard_over_devices((params, keys, states), n)
-
-        runner = jax.jit(
-            jax.vmap(lambda p, k, s: R.run_rounds(ctx, p, k, s, with_acc=with_acc)[1])
-        )
-        t0 = time.perf_counter()
-        traj = jax.block_until_ready(runner(params, keys, states))
-        wall = time.perf_counter() - t0
-
-        traj = {m: np.asarray(v)[:n] for m, v in traj.items()}
-        n_seeds = len(spec.seeds)
-        for j, i in enumerate(idxs):
+    n_seeds = len(spec.seeds)
+    for L in launched:
+        group: PlanGroup = L["group"]
+        traj = jax.block_until_ready(L["out"])
+        wall = time.perf_counter() - L["t_dispatch"]
+        traj = {m: np.asarray(v)[: L["n"]] for m, v in traj.items()}
+        for j, i in enumerate(group.cell_idx):
             metrics = {
                 m: v[j * n_seeds : (j + 1) * n_seeds] for m, v in traj.items()
             }
@@ -264,13 +488,28 @@ def run_campaign(
                 overrides=dict(spec.cells[i].overrides),
                 metrics=metrics,
             )
-        group_stats.append(
-            {"cells": [spec.cells[i].name for i in idxs], "wall_s": wall}
-        )
+        stats = {
+            "cells": [spec.cells[i].name for i in group.cell_idx],
+            "wall_s": wall,
+            "compile_s": L["compile_s"],
+            "cache_hit": L["cache_hit"],
+            "fused": group.fused,
+            "m_pad": group.m_pad,
+            "n_devices": L["n_dev"],
+            "n_elems": L["n"],
+            "n_elems_padded": L["n_padded"],
+            "cells_per_sec": L["n"] / wall if wall > 0 else float("inf"),
+        }
+        group_stats.append(stats)
         if verbose:
+            kind = "fused" if group.fused else "static"
             print(
-                f"[campaign] group of {len(idxs)} cells x {n_seeds} seeds: "
-                f"{wall:.2f}s ({', '.join(spec.cells[i].name for i in idxs)})"
+                f"[campaign] {kind} group of {group.n_cells} cells x "
+                f"{n_seeds} seeds on {L['n_dev']} device(s): {wall:.2f}s "
+                f"exec + {L['compile_s']:.2f}s compile"
+                f"{' (cached)' if L['cache_hit'] else ''} "
+                f"({stats['cells_per_sec']:.1f} cells/s: "
+                f"{', '.join(stats['cells'])})"
             )
 
     return CampaignResult(

@@ -84,14 +84,27 @@ class CellResult:
 class CampaignResult:
     """All cells of a campaign plus execution accounting.
 
-    ``groups`` records how the engine batched the grid: one entry per
-    compiled program with its member cells and wall-clock seconds.
+    ``groups`` records how the planner batched the grid: one entry per
+    compiled program with its member cells, wall/compile seconds, compile-
+    cache hit flag, fused/m_pad, ``n_devices``, ``cells_per_sec``, and the
+    padded-vs-real (cell, seed) element counts.
     """
 
     cells: list[CellResult]
     seeds: tuple[int, ...]
     groups: list[dict]
     wall_s: float
+
+    @property
+    def cells_per_sec(self) -> float:
+        """Real (cell, seed) elements per campaign wall-second."""
+        n = len(self.cells) * len(self.seeds)
+        return n / self.wall_s if self.wall_s > 0 else float("inf")
+
+    @property
+    def n_devices(self) -> int:
+        """Devices the widest group ran on (1 when unsharded)."""
+        return max((g.get("n_devices", 1) for g in self.groups), default=1)
 
     def cell(self, name: str) -> CellResult:
         for c in self.cells:
@@ -129,9 +142,13 @@ class CampaignResult:
         return {
             "seeds": list(self.seeds),
             "wall_s": self.wall_s,
+            "cells_per_sec": self.cells_per_sec,
+            "n_devices": self.n_devices,
+            # Full execution accounting per compiled program: wall/compile
+            # seconds, cache hit, fused/m_pad, n_devices, cells_per_sec,
+            # and padded-vs-real element counts.
             "groups": [
-                {"cells": list(g["cells"]), "wall_s": g["wall_s"]}
-                for g in self.groups
+                {k: _jsonable(v) for k, v in g.items()} for g in self.groups
             ],
             "cells": {
                 c.name: {

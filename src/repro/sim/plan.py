@@ -1,0 +1,293 @@
+"""Campaign planner: lower a :class:`CampaignSpec` into a ``CampaignPlan`` IR.
+
+The planner decides *how* a scenario grid executes before anything is
+traced; the executor (:func:`repro.sim.campaign.run_campaign`) walks the
+plan. Three decisions are encoded per group:
+
+1. **Bucketing.** Cells sharing a static trace signature share one XLA
+   program (as before). Cells that additionally satisfy :func:`fusable`
+   are bucketed by :func:`fused_signature` — the static signature *minus*
+   ``n_clients`` — so a whole M-sweep lands in one bucket.
+2. **Fusion.** A bucket spanning several ``n_clients`` values becomes a
+   *fused* group: the client axis is padded to the group max
+   (``PlanGroup.m_pad``) and each cell's real client count rides the
+   traced ``CellParams.m_active``; the 0/1 active-client mask folds into
+   the Eq.-13 vote counts through the weighted-count path (PR 3), so the
+   wire format is unchanged and **M moves from a static shape to a traced
+   value**. The O(1/M) claim's most important sweep axis thus compiles
+   once instead of once per M. A bucket with a single M executes exactly
+   the pre-planner unmasked program.
+3. **Placement.** ``shard=True`` makes device placement a plan property:
+   the (cell, seed) batch axis of every group is laid out on a 1-D
+   ``launch/mesh`` data mesh over all local devices.
+
+Fusion requirements (checked per cell by :func:`fusable`): synchronous
+rounds at full participation with no Byzantine cohort, dense wires, and a
+non-oracle ``b`` — i.e. every knob whose *shape semantics* depend on M
+must be off. Everything else (lr/momentum/lam/b_init/attack-id axes,
+seeds, DP, error feedback, kernels) fuses freely.
+
+Compilation is cached in a :class:`CompileCache`: executables are AOT
+compiled via ``jit(fn).lower(*args).compile()`` and keyed by the plan
+group's signature plus the input avals, so re-running a spec (benchmark
+loops, repeated campaigns in one process) skips every lowering. The cache
+counts ``lowerings`` and ``hits`` — tests assert a second identical run
+triggers zero new lowerings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+
+from ..fl import FLConfig
+
+__all__ = [
+    "fusable",
+    "fused_signature",
+    "PlanGroup",
+    "CampaignPlan",
+    "plan_campaign",
+    "CompileCache",
+    "default_compile_cache",
+]
+
+
+def fusable(cfg: FLConfig) -> bool:
+    """Can this cell join a fused heterogeneous-M group?
+
+    True iff nothing about the cell's program depends on M other than
+    array *sizes*: synchronous rounds (the async buffer keys slots to
+    client identity), full participation (the cohort draw's shape is the
+    cohort), no Byzantine rows (``n_byz = int(M * byz_frac)`` is a static
+    slice bound), dense wires (SparseWire has no weighted count path), and
+    non-oracle ``b`` (the oracle maxes over the padded client axis).
+    """
+    return (
+        cfg.async_buffer == 0
+        and cfg.participation >= 1.0
+        and cfg.byz_frac == 0.0
+        and cfg.topk_frac >= 1.0
+        and cfg.b_mode != "oracle"
+    )
+
+
+def fused_signature(cfg: FLConfig) -> tuple:
+    """The static trace signature with the client axis removed.
+
+    Cells sharing it — and individually :func:`fusable` — share one
+    *fused* program at the padded client count; ``n_clients`` itself rides
+    the traced ``CellParams.m_active``.
+    """
+    from .campaign import ACCOUNTING_FIELDS, VMAP_FIELDS
+
+    skip = VMAP_FIELDS | ACCOUNTING_FIELDS | {"n_clients"}
+    return tuple(
+        getattr(cfg, f.name)
+        for f in dataclasses.fields(FLConfig)
+        if f.name not in skip
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGroup:
+    """One executable unit of a campaign: one compiled program.
+
+    ``cell_idx`` indexes into the spec's cells; ``m_pad`` is the padded
+    client-axis size (the max ``n_clients`` over members — equal to every
+    member's when ``fused`` is False). ``fused`` marks heterogeneous-M
+    groups that thread the active-client mask.
+    """
+
+    signature: tuple
+    cell_idx: tuple[int, ...]
+    m_pad: int
+    fused: bool
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.cell_idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignPlan:
+    """Lowered form of a :class:`CampaignSpec`: what compiles and where.
+
+    ``shard`` records the placement decision (batch axis on a 1-D device
+    mesh); the executor resolves the actual device count at run time and
+    reports it per group.
+    """
+
+    spec: Any  # CampaignSpec (kept untyped to avoid a circular import)
+    groups: tuple[PlanGroup, ...]
+    fuse_m: bool
+    shard: bool
+
+    @property
+    def n_programs(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_fused(self) -> int:
+        return sum(1 for g in self.groups if g.fused)
+
+    def describe(self) -> str:
+        """Human-readable plan summary (one line per group)."""
+        lines = [
+            f"CampaignPlan: {len(self.spec.cells)} cells x "
+            f"{len(self.spec.seeds)} seeds -> {self.n_programs} programs "
+            f"({self.n_fused} fused, shard={self.shard})"
+        ]
+        for g in self.groups:
+            kind = f"fused@M<={g.m_pad}" if g.fused else f"M={g.m_pad}"
+            names = ", ".join(self.spec.cells[i].name for i in g.cell_idx)
+            lines.append(f"  [{kind}] {g.n_cells} cells: {names}")
+        return "\n".join(lines)
+
+
+def plan_campaign(
+    spec, *, fuse_m: bool = True, shard: bool = False
+) -> CampaignPlan:
+    """Lower a spec into a :class:`CampaignPlan`.
+
+    Grouping preserves the old engine's buckets exactly for non-fusable
+    cells (static signature); fusable cells bucket by
+    :func:`fused_signature` instead, merging an M-sweep into one program.
+    ``fuse_m=False`` reproduces the pre-planner per-signature grouping for
+    every cell (the parity baseline the fused path is tested against).
+    """
+    from .campaign import group_signature
+
+    cfgs = spec.configs()
+    buckets: dict[tuple, list[int]] = {}
+    for i, cfg in enumerate(cfgs):
+        if fuse_m and fusable(cfg):
+            key = ("fused", *fused_signature(cfg))
+        else:
+            key = ("static", *group_signature(cfg))
+        buckets.setdefault(key, []).append(i)
+
+    groups = []
+    for key, idxs in buckets.items():
+        m_values = {cfgs[i].n_clients for i in idxs}
+        groups.append(
+            PlanGroup(
+                signature=key,
+                cell_idx=tuple(idxs),
+                m_pad=max(m_values),
+                # A single-M bucket runs the exact unmasked program even
+                # when it bucketed by fused signature — masking would only
+                # add traced-M overhead for nothing.
+                fused=len(m_values) > 1,
+            )
+        )
+    return CampaignPlan(
+        spec=spec, groups=tuple(groups), fuse_m=fuse_m, shard=shard
+    )
+
+
+class CompileCache:
+    """AOT-compile cache: ``(plan signature, input avals) -> executable``.
+
+    ``compile(key, fn, args)`` lowers and compiles ``jit(fn)`` for the
+    concrete ``args`` on a miss and returns the cached executable on a
+    hit. The key must carry everything that shapes the program *besides*
+    the argument avals (which are derived from ``args``): the plan group's
+    static signature, execution flags, and a fingerprint of the task
+    constants baked into the trace.
+
+    Task constants are fingerprinted by object identity
+    (:func:`task_fingerprint`); each cache entry keeps a strong reference
+    to the objects behind its fingerprint (``keepalive``), so an id can
+    never be recycled into a stale hit while the entry lives. Repeatedly
+    running the same spec with a memoized task provider (the benchmark
+    harness pattern) therefore triggers zero new lowerings after the
+    first run; a genuinely new task object conservatively recompiles.
+
+    The cache is LRU-bounded (``maxsize`` entries, default 128): a
+    non-memoized task provider that rebuilds its arrays every call misses
+    the id fingerprint each time, and without eviction a long-lived
+    process would pin every old executable *and* dataset forever.
+    Evicting an entry drops its keepalive references with it.
+    """
+
+    def __init__(self, maxsize: int = 128):
+        self._entries: dict = {}  # insertion-ordered: LRU via re-insert
+        self.maxsize = maxsize
+        self.lowerings = 0
+        self.hits = 0
+
+    @staticmethod
+    def _avals(args) -> tuple:
+        return tuple(
+            (tuple(x.shape), str(x.dtype))
+            for x in jax.tree_util.tree_leaves(args)
+        )
+
+    @classmethod
+    def _fingerprint_one(cls, obj: Any) -> tuple:
+        """Structural identity of one trace constant.
+
+        ``functools.partial`` wrappers are unwrapped into the identities of
+        their target and bound arguments — task providers typically build a
+        fresh ``partial(loss, model)`` per call around stable underlying
+        functions and cached arrays, and the fresh wrapper must not defeat
+        the cache. Everything else fingerprints by ``id`` (module-level
+        functions and memoized arrays are stable; a genuinely new object
+        conservatively recompiles).
+        """
+        import functools
+
+        if isinstance(obj, functools.partial):
+            return (
+                "partial",
+                cls._fingerprint_one(obj.func),
+                tuple(cls._fingerprint_one(a) for a in obj.args),
+                tuple(
+                    (k, cls._fingerprint_one(v))
+                    for k, v in sorted(obj.keywords.items())
+                ),
+            )
+        return ("id", id(obj))
+
+    def task_fingerprint(self, task_objs: Sequence[Any]) -> tuple:
+        """Identity fingerprint of trace constants.
+
+        The caller must pass the same objects to :meth:`compile` as
+        ``keepalive`` so their ids stay valid for the entry's lifetime.
+        """
+        return tuple(self._fingerprint_one(o) for o in task_objs)
+
+    def compile(
+        self, key: tuple, fn: Callable, args: tuple, keepalive: Sequence[Any] = ()
+    ):
+        full_key = (key, self._avals(args))
+        entry = self._entries.pop(full_key, None)
+        if entry is None:
+            self.lowerings += 1
+            entry = (jax.jit(fn).lower(*args).compile(), tuple(keepalive))
+            while len(self._entries) >= self.maxsize:
+                self._entries.pop(next(iter(self._entries)))
+        else:
+            self.hits += 1
+        self._entries[full_key] = entry  # re-insert: most recently used last
+        return entry[0]
+
+    @property
+    def size(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.lowerings = 0
+        self.hits = 0
+
+
+_DEFAULT_CACHE = CompileCache()
+
+
+def default_compile_cache() -> CompileCache:
+    """The process-wide cache ``run_campaign`` uses unless handed one."""
+    return _DEFAULT_CACHE

@@ -1,0 +1,65 @@
+"""Adaptive-adversary unit tests: the ALIE breakdown-point quantile.
+
+Regression-pins the ``z`` values the ALIE attack derives from
+``(cohort size, Byzantine count)`` per Baruch et al. (2019):
+``s = floor(n/2 + 1) - m`` supporters are needed to hide inside the
+majority, and ``z = Phi^{-1}((n - m - s)/(n - m))`` — clamped to 0 when
+the quantile falls at or below 1/2 (the Byzantine cohort cannot recruit a
+majority at any non-negative z).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import alie_z, apply_attack, attack_id
+
+# (n, n_byz) -> z, from the closed form above (values pinned to 1e-6).
+PINNED_Z = {
+    (20, 4): 0.157311,
+    (24, 5): 0.199201,
+    (50, 12): 0.336038,
+    (100, 20): 0.285841,
+    (100, 45): 1.231377,
+    (10, 3): 0.180012,
+}
+
+
+@pytest.mark.parametrize("nm,expected", sorted(PINNED_Z.items()))
+def test_alie_z_pinned_quantiles(nm, expected):
+    n, m = nm
+    assert alie_z(n, m) == pytest.approx(expected, abs=1e-6)
+
+
+@pytest.mark.parametrize(
+    "n,m",
+    [(10, 0), (10, 1), (6, 2), (4, 2), (5, 5), (3, 4)],
+)
+def test_alie_z_degenerate_cases_clamp_to_zero(n, m):
+    """No Byzantines, sub-breakdown fractions (quantile <= 1/2), and
+    honest-free cohorts all degrade to z = 0 (upload the honest mean)."""
+    assert alie_z(n, m) == 0.0
+
+
+def test_alie_z_monotone_in_byzantine_fraction():
+    """More colluders -> more supporters available -> larger z."""
+    zs = [alie_z(100, m) for m in (20, 30, 40, 45, 49)]
+    assert all(b >= a for a, b in zip(zs, zs[1:]))
+    assert zs[-1] > 1.0  # near-half collusion hides > 1 std away
+
+
+def test_alie_attack_uses_breakdown_z():
+    """The delta-stage attack writes mean - z*std with the derived z."""
+    n, n_byz = 20, 4
+    key = jax.random.PRNGKey(0)
+    updates = jax.random.normal(key, (n, 7))
+    out = apply_attack(
+        jnp.asarray(attack_id("alie")), key, updates, n_byz
+    )
+    honest = np.asarray(updates)[n_byz:]
+    expected = honest.mean(0) - alie_z(n, n_byz) * honest.std(0)
+    np.testing.assert_allclose(
+        np.asarray(out)[:n_byz], np.tile(expected, (n_byz, 1)), rtol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(out)[n_byz:], honest)
