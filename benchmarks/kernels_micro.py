@@ -13,7 +13,34 @@ from .common import emit, timed
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core import build_pipeline, padded_dim, probit_plus_from_updates  # noqa: E402
+from repro.core.quantizer import packed_counts  # noqa: E402
 from repro.kernels import ops  # noqa: E402
+
+
+def popcount_counts(n: int = 262_144, m: int = 256) -> dict:
+    """Wire-count reduction: population_count vs unpack-and-sum.
+
+    Both produce identical integer counts from the same (M, n/8) uint8
+    wire; the popcount path transposes octets of client rows and reduces
+    whole bytes, the reference path unpacks each bit to int8 first. The
+    measured ratio is the satellite number for the streaming-aggregation
+    PR (the count reduction runs once per client chunk there).
+    """
+    key = jax.random.PRNGKey(3)
+    packed = jax.random.randint(key, (m, n // 8), 0, 256, jnp.uint8)
+    out: dict = {}
+    us_ref = None
+    for label, use_pop in (("unpack", False), ("popcount", True)):
+        run = jax.jit(lambda p, u=use_pop: packed_counts(p, use_popcount=u))
+        us = timed(lambda: run(packed), reps=10)
+        out[f"counts_{label}_us"] = us
+        us_ref = us_ref or us
+        emit(
+            f"counts_{label}",
+            us,
+            f"M={m};n={n};speedup_vs_unpack={us_ref / us:.2f}x",
+        )
+    return out
 
 
 def pipeline_traffic(n: int = 262_144, m: int = 16) -> dict:
@@ -93,8 +120,21 @@ def main(n: int = 262_144, m: int = 16) -> dict:
     emit("kernel_prox_sgd", us, "fused_passes=1_vs_4")
 
     out.update(pipeline_traffic(n, m))
+    out.update(popcount_counts(n))
     return out
 
 
 if __name__ == "__main__":
-    main()
+    # Standalone entry writes the same artifact path as benchmarks.run so
+    # the nightly job can upload kernel numbers without the full figure
+    # sweep.
+    import json
+
+    results = {"kernels": main()}
+    report = os.path.join(
+        os.path.dirname(__file__), "..", "reports", "bench_results.json"
+    )
+    os.makedirs(os.path.dirname(report), exist_ok=True)
+    with open(report, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"# results written to {report}")

@@ -22,7 +22,7 @@ def main() -> None:
 
     from . import fig3_dynamic_b, fig4_clients_privacy, table1_byzantine
     from . import fig_async_staleness, fig_privacy_amplification
-    from . import fig_campaign_throughput
+    from . import fig_campaign_throughput, fig_streaming_clients
     from . import theorem_rates, kernels_micro, roofline
 
     results = {}
@@ -43,6 +43,10 @@ def main() -> None:
     results["fig_privacy"] = fig_privacy_amplification.main(rounds)
     print("# --- Campaign throughput: cells/sec vs virtual device count ---")
     results["fig_throughput"] = fig_campaign_throughput.main(rounds)
+    print("# --- Streaming clients: dense vs chunked vs sharded M-sweep ---")
+    results["fig_streaming"] = fig_streaming_clients.main(
+        m_grid=(1_000, 10_000, 100_000) if args.quick else None
+    )
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

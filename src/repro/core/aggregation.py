@@ -288,6 +288,19 @@ class ClientCompressor:
     # The Eq.-5 bit probability — shared with the mesh path (fl_step).
     bit_probability = staticmethod(binarize_prob)
 
+    def b_vector(self, d: int, b_scalar: jax.Array) -> jax.Array:
+        """The public range vector for dimension ``d`` (non-oracle modes).
+
+        The streaming round needs ``b`` once, outside the client-chunk
+        scan, to finalize the accumulated counts; oracle mode maxes over
+        the full client axis and therefore cannot stream.
+        """
+        if self.b_mode == "oracle":
+            raise ValueError("oracle b depends on all updates and cannot stream")
+        if self.mode == "pack_sign":
+            return jnp.ones((d,), jnp.float32)
+        return self._b_vector(jnp.zeros((1, d), jnp.float32), b_scalar)
+
     def wire_bytes(self, d: int) -> int | None:
         """Bytes per packed wire row for dimension ``d`` (None for dense).
 
@@ -322,9 +335,18 @@ class ClientCompressor:
         deltas: jax.Array,
         b_scalar: jax.Array,
         residuals: jax.Array,
+        *,
+        row_offset: jax.Array | int = 0,
     ) -> tuple[Wire, jax.Array]:
         """(M, d) updates -> (wire, residuals'). Residuals pass through
-        unchanged unless error feedback is active (PRoBit+, no DP)."""
+        unchanged unless error feedback is active (PRoBit+, no DP).
+
+        ``row_offset`` rebases the per-client quantizer keys: a streaming
+        round compressing cohort chunk ``[g0, g0 + C)`` passes ``g0`` so
+        row ``i`` draws exactly the bits it would draw at cohort position
+        ``g0 + i`` of an all-at-once compress (see
+        :func:`~repro.core.quantizer.packed_binarize_batch`).
+        """
         if self.mode == "dense":
             return DenseWire(updates=deltas), residuals
         if self.mode == "pack_sign":
@@ -370,7 +392,9 @@ class ClientCompressor:
         if self.use_kernels:
             from ..kernels import ops as kops
 
-            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(m))
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                row_offset + jnp.arange(m)
+            )
             packed = jax.vmap(lambda ck, row: kops.stoch_quant_pack(ck, row, b_vec))(
                 keys, eff
             )
@@ -379,7 +403,8 @@ class ClientCompressor:
             return PackedWire(packed=packed, b=b_vec, d=d), residuals
 
         packed, res = packed_binarize_batch(
-            key, eff, b_vec, chunk=self.chunk, want_residual=use_ef
+            key, eff, b_vec, chunk=self.chunk, want_residual=use_ef,
+            row_offset=row_offset,
         )
         if use_ef:
             residuals = res
@@ -392,13 +417,30 @@ class ClientCompressor:
 
 @dataclasses.dataclass(frozen=True)
 class ServerAggregator:
-    """Server half: unpack/vote-count -> estimate.
+    """Server half: count accumulation -> estimate.
 
-    Bit-based schemes override :meth:`from_counts`; dense schemes override
-    :meth:`from_dense`. :meth:`aggregate` dispatches on the wire type.
+    Count accumulation is the **first-class aggregation primitive**: the
+    packed path of every bit scheme composes from
 
-    ``weights`` (one per wire row) activates the age-weighted path used by
-    the buffered-asynchronous server: the vote counts become
+    * :meth:`init_counts` — a zero count carry for a ``P``-byte wire row;
+    * :meth:`accumulate_counts` — fold one ``(C, P)`` wire chunk (any
+      client subset) into the carry. Vote counts are additive over
+      clients, so chunks may arrive in any split — a streaming round
+      scans client-chunks through this with O(C * P) resident memory;
+    * :meth:`finalize` — the per-scheme estimate from ``(counts, M, b)``.
+
+    :meth:`aggregate` is the one-shot composition (single chunk = whole
+    cohort), bit-identical to pre-streaming behavior. Bit-based schemes
+    override :meth:`from_counts`; dense schemes override
+    :meth:`from_dense` and advertise their streaming form via
+    ``stream_kind``: ``"counts"`` (PRoBit+ / signSGD-MV / RSA stream
+    exactly), ``"sum"`` (FedAvg streams a weighted running sum), or
+    ``"buffer"`` (Fed-GM needs all rows resident — parity fallback only,
+    not memory-bounded).
+
+    ``weights`` (one per wire row) activates the weighted count path used
+    by the buffered-asynchronous server and the fused heterogeneous-M /
+    padded-chunk masks: the vote counts become
     ``N_i^w = sum_m w_m 1[c_i^m = +1]`` and the effective cohort size
     ``M^w = sum_m w_m``, both fed to the *same* per-scheme estimate —
     Eq. 13 and the signSGD-MV / RSA rules are all affine in ``(N, M)``, so
@@ -407,6 +449,7 @@ class ServerAggregator:
     """
 
     chunk: int = PACK_CHUNK
+    stream_kind = "counts"
 
     def from_counts(self, counts: jax.Array, m, b: jax.Array) -> jax.Array:
         raise NotImplementedError
@@ -416,6 +459,53 @@ class ServerAggregator:
     ) -> jax.Array:
         raise NotImplementedError
 
+    # -- streaming count protocol ------------------------------------------
+
+    def init_counts(self, p_bytes: int, *, weighted: bool = False) -> jax.Array:
+        """Zero vote-count carry for a ``p_bytes``-per-row packed wire.
+
+        int32 for the exact unweighted count; f32 when per-row weights
+        (staleness / active-client masks) fold in. f32 sums of 0/1-weighted
+        bits stay exact below 2**24 contributing clients.
+        """
+        return jnp.zeros((8 * p_bytes,), jnp.float32 if weighted else jnp.int32)
+
+    def accumulate_counts(
+        self,
+        counts: jax.Array,
+        wire_chunk: jax.Array,
+        weights_chunk: jax.Array | None = None,
+    ) -> jax.Array:
+        """Fold one packed client-chunk ``(C, P)`` into the count carry."""
+        if weights_chunk is None:
+            return counts + packed_counts(wire_chunk, chunk=self.chunk)
+        return counts + packed_weighted_counts(
+            wire_chunk, weights_chunk, chunk=self.chunk
+        )
+
+    def finalize(self, counts: jax.Array, m, b: jax.Array) -> jax.Array:
+        """Per-scheme estimate from accumulated counts (slices pad bits)."""
+        return self.from_counts(counts[: b.shape[0]], m, b)
+
+    # -- streaming dense-sum protocol (FedAvg) -----------------------------
+
+    def init_stream_sum(self, d: int) -> tuple[jax.Array, jax.Array]:
+        """Zero ``(sum_m w_m u_m, sum_m w_m)`` carry for dense streaming."""
+        return jnp.zeros((d,), jnp.float32), jnp.float32(0.0)
+
+    def accumulate_sum(self, carry, updates: jax.Array, weights_chunk: jax.Array):
+        s, w = carry
+        return (
+            s + jnp.sum(updates * weights_chunk[:, None], axis=0),
+            w + jnp.sum(weights_chunk),
+        )
+
+    def finalize_sum(self, carry) -> jax.Array:
+        s, w = carry
+        return jnp.where(w > 0, s / jnp.maximum(w, 1e-12), 0.0)
+
+    # -- one-shot composition ----------------------------------------------
+
     def aggregate(
         self, wire: Wire, weights: jax.Array | None = None
     ) -> jax.Array:
@@ -423,14 +513,17 @@ class ServerAggregator:
             return self.from_dense(wire.updates, weights)
         if isinstance(wire, SparseWire):
             raise TypeError(f"{type(self).__name__} cannot consume SparseWire")
+        p_bytes = wire.packed.shape[1]
         if weights is None:
-            counts = packed_counts(wire.packed, chunk=self.chunk)[: wire.d]
-            return self.from_counts(counts, wire.n_clients, wire.b)
-        wcounts = packed_weighted_counts(
-            wire.packed, weights, chunk=self.chunk
-        )[: wire.d]
+            counts = self.accumulate_counts(
+                self.init_counts(p_bytes), wire.packed
+            )
+            return self.finalize(counts, wire.n_clients, wire.b)
+        wcounts = self.accumulate_counts(
+            self.init_counts(p_bytes, weighted=True), wire.packed, weights
+        )
         wsum = jnp.sum(weights.astype(jnp.float32))
-        est = self.from_counts(wcounts, jnp.maximum(wsum, 1e-12), wire.b)
+        est = self.finalize(wcounts, jnp.maximum(wsum, 1e-12), wire.b)
         # An all-empty buffer (round 0 under heavy latency) estimates zero.
         return jnp.where(wsum > 0, est, 0.0)
 
@@ -493,13 +586,22 @@ class RSAServer(ServerAggregator):
 
 @dataclasses.dataclass(frozen=True)
 class FedAvgServer(ServerAggregator):
+    """Dense mean; streams as a weighted running sum (``stream_kind="sum"``)."""
+
+    stream_kind = "sum"
+
     def from_dense(self, updates, weights=None):
         return fedavg_aggregate(updates, weights)
 
 
 @dataclasses.dataclass(frozen=True)
 class FedGMServer(ServerAggregator):
+    """Weiszfeld geometric median — every iteration touches every row, so
+    streaming buffers all rows (``stream_kind="buffer"``; parity fallback
+    only, memory stays O(M * d))."""
+
     iters: int = 16
+    stream_kind = "buffer"
 
     def from_dense(self, updates, weights=None):
         return geometric_median(updates, self.iters, weights=weights)
@@ -526,6 +628,7 @@ class AggregatorPipeline:
         *,
         flip_n: int = 0,
         flip_gate: jax.Array | None = None,
+        row_offset: jax.Array | int = 0,
     ) -> tuple[Wire, jax.Array]:
         """Client half only: compress all clients onto the wire.
 
@@ -537,15 +640,28 @@ class AggregatorPipeline:
         the honest compressor's (Byzantine rows lie about those too, which
         is exactly what an adversarial client would do under EF).
 
+        ``row_offset`` identifies the rows as cohort positions
+        ``[row_offset, row_offset + M)`` — the streaming round passes its
+        chunk start so both the quantizer keys and the first-``flip_n``
+        Byzantine membership resolve against global cohort position, not
+        chunk-local row index.
+
         Exposed separately from :meth:`estimate` so the asynchronous round
         can interpose its staleness buffer between compression and the
         server estimate without reformatting the wire.
         """
-        wire, residuals = self.compressor.compress(key, deltas, b_scalar, residuals)
+        static_zero_offset = isinstance(row_offset, int) and row_offset == 0
+        wire, residuals = self.compressor.compress(
+            key, deltas, b_scalar, residuals, row_offset=row_offset
+        )
         if flip_n:
-            from .attacks import flip_wire
+            from .attacks import flip_wire, flip_wire_rows
 
-            flipped = flip_wire(wire, flip_n)
+            if static_zero_offset:
+                flipped = flip_wire(wire, flip_n)
+            else:
+                rows = row_offset + jnp.arange(deltas.shape[0])
+                flipped = flip_wire_rows(wire, rows < flip_n)
             if flip_gate is None:
                 wire = flipped
             else:

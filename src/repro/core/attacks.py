@@ -73,8 +73,11 @@ __all__ = [
     "parse_attack",
     "available_attacks",
     "apply_attack",
+    "apply_attack_stream",
+    "STREAM_ATTACKS",
     "flip_codes",
     "flip_wire",
+    "flip_wire_rows",
 ]
 
 
@@ -264,6 +267,65 @@ def apply_attack(idx: jax.Array, key: jax.Array, updates: jax.Array, n_byz: int)
     return jax.lax.switch(idx, branches, key, updates)
 
 
+# Attacks whose Byzantine rewrite depends only on the row's own update and
+# its cohort position — the streamable subset. Colluding attacks
+# (zero_gradient, sample_duplicate, alie, ipm) read the *whole* honest
+# cohort to craft their payload and therefore cannot run under a
+# client-chunk scan; FLConfig validation rejects them when
+# ``client_chunk > 0`` with ``byz_frac > 0``.
+STREAM_ATTACKS: frozenset[str] = frozenset(
+    {"none", "gaussian", "sign_flip", "bit_flip"}
+)
+
+
+def apply_attack_stream(
+    idx: jax.Array,
+    key: jax.Array,
+    updates: jax.Array,
+    byz_mask: jax.Array,
+    row_ids: jax.Array,
+) -> jax.Array:
+    """Chunk-local delta-level attack dispatch for the streaming round.
+
+    ``updates`` is one ``(C, d)`` client chunk; ``byz_mask`` marks which of
+    its rows are Byzantine (in the dense round those are the first
+    ``n_byz`` cohort rows, here ``row_ids < n_byz``); ``row_ids`` are the
+    rows' global cohort positions. Branch order follows
+    :data:`ATTACK_IDS` so the same traced attack id drives both paths.
+
+    Parity with :func:`apply_attack`:
+
+    * ``none`` / ``sign_flip`` — value-identical (row-local rewrites).
+    * ``gaussian`` — per-row noise keyed by ``fold_in(key, row_id)`` so the
+      draw is *chunk-invariant* (any chunking of the same cohort produces
+      the same noise) but a different sample than the dense path's single
+      blocked ``normal(key, (n_byz, d))`` draw — same N(0, 100)
+      distribution, so statistical suites agree while bit-level parity is
+      asserted stream-vs-stream.
+    * colluding ids — identity here; excluded by config validation.
+    """
+    d = updates.shape[1]
+
+    def _identity(k, u):
+        return u
+
+    def _gauss_stream(k, u):
+        noise = 10.0 * jax.vmap(
+            lambda r: jax.random.normal(jax.random.fold_in(k, r), (d,), u.dtype)
+        )(row_ids)
+        return jnp.where(byz_mask[:, None], noise, u)
+
+    def _sign_flip_stream(k, u):
+        return jnp.where(byz_mask[:, None], -5.0 * u, u)
+
+    branch_map = {
+        "gaussian": _gauss_stream,
+        "sign_flip": _sign_flip_stream,
+    }
+    branches = [branch_map.get(name, _identity) for name in ATTACK_IDS]
+    return jax.lax.switch(idx, branches, key, updates)
+
+
 def flip_codes(codes: jax.Array, n_byz: int) -> jax.Array:
     """Worst-case bit adversary: invert the first ``n_byz`` clients' codes."""
     return codes.at[:n_byz].set(-codes[:n_byz])
@@ -282,4 +344,23 @@ def flip_wire(wire, n_byz: int):
     if isinstance(wire, DenseWire):
         return DenseWire(updates=wire.updates.at[:n_byz].set(-wire.updates[:n_byz]))
     flipped = wire.packed.at[:n_byz].set(jnp.bitwise_not(wire.packed[:n_byz]))
+    return dataclasses.replace(wire, packed=flipped)
+
+
+def flip_wire_rows(wire, row_mask: jax.Array):
+    """:func:`flip_wire` with a traced per-row Byzantine mask.
+
+    The streaming round cannot use the static ``.at[:n_byz]`` slice — its
+    chunk straddles the Byzantine/honest boundary at a traced offset — so
+    membership arrives as a boolean mask over the chunk's rows.
+    """
+    from .aggregation import DenseWire
+
+    if isinstance(wire, DenseWire):
+        return DenseWire(
+            updates=jnp.where(row_mask[:, None], -wire.updates, wire.updates)
+        )
+    flipped = jnp.where(
+        row_mask[:, None], jnp.bitwise_not(wire.packed), wire.packed
+    )
     return dataclasses.replace(wire, packed=flipped)

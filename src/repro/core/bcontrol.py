@@ -20,7 +20,15 @@ import jax.numpy as jnp
 
 from .privacy import DPConfig, dp_b_floor
 
-__all__ = ["BControlConfig", "BState", "init_b_state", "loss_bit", "update_b", "oracle_b"]
+__all__ = [
+    "BControlConfig",
+    "BState",
+    "init_b_state",
+    "loss_bit",
+    "update_b",
+    "update_b_from_vote",
+    "oracle_b",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +75,18 @@ def update_b(
     votes = bits.astype(jnp.float32)
     if weights is not None:
         votes = votes * weights
-    vote = jnp.sum(votes)
+    return update_b_from_vote(state, jnp.sum(votes), cfg)
+
+
+def update_b_from_vote(
+    state: BState, vote: jax.Array, cfg: BControlConfig
+) -> BState:
+    """Rescale ``b`` from an already-summed (possibly weighted) vote.
+
+    The streaming round accumulates ``sum_m w_m bit_m`` chunk by chunk —
+    the vote is additive over clients like the Eq.-13 counts — and feeds
+    the total here; :func:`update_b` is the one-shot composition.
+    """
     factor = jnp.where(vote > 0, cfg.up, cfg.down)
     if cfg.mode == "fixed":
         factor = jnp.float32(1.0)

@@ -25,6 +25,7 @@ __all__ = [
     "pack_bits",
     "unpack_bits",
     "codes_to_counts",
+    "byte_popcount",
     "PACK_CHUNK",
     "padded_dim",
     "packed_binarize_batch",
@@ -85,6 +86,15 @@ def codes_to_counts(codes: jax.Array) -> jax.Array:
     return jnp.sum((codes > 0).astype(jnp.int32), axis=0)
 
 
+def byte_popcount(x: jax.Array) -> jax.Array:
+    """Per-byte bit count: ``jax.lax.population_count`` with a uint8-LUT
+    fallback for backends/versions without the primitive."""
+    if hasattr(jax.lax, "population_count"):
+        return jax.lax.population_count(x)
+    lut = jnp.asarray([bin(i).count("1") for i in range(256)], jnp.uint8)
+    return lut[x.astype(jnp.uint8)]
+
+
 # ---------------------------------------------------------------------------
 # Packed wire format: chunked batch quantize / count
 #
@@ -136,12 +146,18 @@ def packed_binarize_batch(
     *,
     chunk: int = PACK_CHUNK,
     want_residual: bool = False,
+    row_offset: jax.Array | int = 0,
 ) -> tuple[jax.Array, jax.Array | None]:
     """Chunked Eq. 5 binarize + pack: (M, d) f32 -> (M, d_pad/8) uint8.
 
     Randomness schedule: coordinate chunk ``j`` of client ``m`` draws its
-    uniforms from ``fold_in(fold_in(key, m), j)``, so the wire is exactly
-    reproducible chunk-by-chunk without an (M, d) uniform or code tensor.
+    uniforms from ``fold_in(fold_in(key, row_offset + m), j)``, so the
+    wire is exactly reproducible chunk-by-chunk without an (M, d) uniform
+    or code tensor. ``row_offset`` (static or traced) rebases the client
+    index: a streaming round that compresses the cohort in client-chunks
+    passes the chunk's first cohort position, making the chunked wire
+    bit-identical to the all-at-once one (the counter-derived draws of
+    ``jax_threefry_partitionable`` depend only on the absolute row).
 
     With ``want_residual`` the error-feedback residual
     ``delta - c * b`` (codes in ±1) is emitted alongside, computed inside
@@ -150,7 +166,9 @@ def packed_binarize_batch(
     m, d = deltas.shape
     deltas_p, b_full, d_pad = _pad_batch(deltas, b, chunk)
     n_chunks = d_pad // chunk
-    client_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(m))
+    client_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        row_offset + jnp.arange(m)
+    )
 
     def one_chunk(j):
         dch = jax.lax.dynamic_slice_in_dim(deltas_p, j * chunk, chunk, axis=1)
@@ -182,14 +200,46 @@ def packed_sign_batch(deltas: jax.Array, *, chunk: int = PACK_CHUNK) -> jax.Arra
     return _pack_bool_lastdim(deltas_p >= 0)
 
 
+def _popcount_colsums(pch: jax.Array) -> jax.Array:
+    """Column bit-sums of a packed chunk via octet transpose + popcount.
+
+    (M, cb) uint8 -> (cb * 8,) int32, column order byte-major / LSB-first
+    (bit k of byte j is coordinate ``8 j + k``). Clients are grouped into
+    octets of 8; the bit-k's of an octet's bytes are re-packed into one
+    byte, whose :func:`byte_popcount` counts 8 clients' votes at once —
+    the client reduction shortens 8x (M -> M/8 octets) and the widest
+    intermediate stays uint8 instead of int32. Zero pad rows (M % 8)
+    contribute zero bits, so the counts are exactly the unpack-and-sum
+    ones.
+    """
+    m, cb = pch.shape
+    pad = (-m) % 8
+    x = jnp.pad(pch, ((0, pad), (0, 0))).reshape(-1, 8, cb)  # (G, 8, cb)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bit_k = (x[:, :, :, None] >> shifts) & jnp.uint8(1)  # (G, 8, cb, 8)
+    octet = jnp.sum(
+        bit_k << shifts[None, :, None, None], axis=1, dtype=jnp.uint8
+    )  # (G, cb, 8) client-major bytes: bit g of octet[., j, k] = client bit
+    counts = jnp.sum(byte_popcount(octet).astype(jnp.int32), axis=0)
+    return counts.reshape(cb * 8)
+
+
 def _chunked_bit_counts(
-    packed: jax.Array, chunk: int, weights: jax.Array | None
+    packed: jax.Array,
+    chunk: int,
+    weights: jax.Array | None,
+    *,
+    use_popcount: bool = True,
 ) -> jax.Array:
     """Shared chunk walk for the packed-wire count reductions.
 
     One chunk-layout / pad-handling implementation serves both the integer
     and the weighted count so the two can never diverge; only the
-    per-chunk reduction differs.
+    per-chunk reduction differs. The integer count uses the popcount
+    reduction (:func:`_popcount_colsums`) unless ``use_popcount=False``
+    selects the unpack-and-sum reference (kept for the microbenchmark and
+    as the semantics oracle); the weighted count must unpack (a per-client
+    f32 multiply cannot ride a popcount).
     """
     m, pbytes = packed.shape
     cb = min(chunk // 8, pbytes)
@@ -199,6 +249,8 @@ def _chunked_bit_counts(
 
     def one_chunk(j):
         pch = jax.lax.dynamic_slice_in_dim(packed, j * cb, cb, axis=1)
+        if weights is None and use_popcount:
+            return _popcount_colsums(pch)
         bits = (pch[..., None] >> shifts) & jnp.uint8(1)  # (M, cb, 8)
         if weights is None:
             acc = bits.astype(jnp.int32)
@@ -210,13 +262,18 @@ def _chunked_bit_counts(
     return counts[: 8 * pbytes]
 
 
-def packed_counts(packed: jax.Array, *, chunk: int = PACK_CHUNK) -> jax.Array:
+def packed_counts(
+    packed: jax.Array, *, chunk: int = PACK_CHUNK, use_popcount: bool = True
+) -> jax.Array:
     """Vote counts ``N_i`` straight from the packed wire, chunked over d.
 
     packed: (M, P) uint8 -> counts (8 * P,) int32. Only O(M * chunk) bits
     are unpacked at a time; the int8 code matrix never materializes.
+    ``use_popcount=False`` forces the unpack-and-sum reference reduction
+    (identical integer counts; see ``benchmarks/kernels_micro.py`` for the
+    measured difference).
     """
-    return _chunked_bit_counts(packed, chunk, None)
+    return _chunked_bit_counts(packed, chunk, None, use_popcount=use_popcount)
 
 
 def packed_weighted_counts(

@@ -1,9 +1,32 @@
 """Pure functional FL round core — paper Algorithm 1 as state -> state.
 
-Two round variants share one client side (:func:`_client_uploads`):
+Three round variants share one client-side recipe (participation
+sampling, local prox-training, delta attack, Eq.-5 compression):
 
-* :func:`fl_round` — the paper's synchronous protocol (all M sampled
-  clients upload in lockstep);
+* :func:`fl_round` — the paper's synchronous protocol, *dense* execution:
+  all M sampled clients train under one ``vmap`` and the full
+  ``(M, d_pad/8)`` wire materializes before the estimate
+  (:func:`_client_uploads`);
+* :func:`stream_fl_round` — the same synchronous protocol under a
+  **chunked execution model**: the cohort is scanned in chunks of
+  ``FLConfig.client_chunk`` clients (``lax.scan``), and each chunk's
+  train -> attack -> compress -> count-accumulate pipeline folds into
+  additive carries (packed vote counts, the b-controller's loss-bit vote,
+  metric sums). Resident memory is **O(client_chunk * d/8)** for the wire
+  plus O(d) for the accumulators — independent of M — which is what lets
+  a single CPU host run million-client PRoBit+ rounds. Per-client PRNG is
+  counter-derived (batches keyed ``fold_in(kb, client_id)``, quantizer
+  rows keyed ``fold_in(k_q, cohort_position)``), so under
+  ``jax_threefry_partitionable`` any chunking of the cohort draws exactly
+  the dense round's bits: count-streaming schemes (PRoBit+ / signSGD-MV /
+  RSA) are *bit-identical* to :func:`fl_round` in eager mode and agree to
+  1e-6 under jit (reassociation only). Byzantine membership, active-client
+  masks, and staleness-style weights all enter as per-chunk row weights
+  folded into the same accumulation. With ``FLConfig.stream_shard`` the
+  chunk scan itself is sharded across the campaign mesh
+  (:func:`repro.launch.mesh.make_campaign_mesh`): each device scans its
+  slice of the client axis and the additive carries ``psum`` — the
+  weighted-count reduction is the cross-device collective.
 * :func:`async_fl_round` — buffered-asynchronous rounds (beyond paper):
   uploads arrive per a latency model, the server estimates from a bounded
   staleness buffer with age-weighted vote counts, and the ``straggler``
@@ -63,6 +86,8 @@ from ..core import (
     staleness_weights,
     update_b,
 )
+from ..core.attacks import apply_attack_stream
+from ..core.bcontrol import update_b_from_vote
 from ..optim import local_prox_train
 
 __all__ = [
@@ -78,6 +103,7 @@ __all__ = [
     "client_mask",
     "round_batches",
     "fl_round",
+    "stream_fl_round",
     "async_fl_round",
     "round_fn",
     "evaluate",
@@ -206,6 +232,25 @@ def make_context(
     w0, unravel = ravel_pytree(init_params)
     if wire_flip is None:
         wire_flip = is_wire_attack(cfg.attack)
+    if cfg.stream_shard:
+        import warnings
+
+        n_dev = len(jax.devices())
+        if n_dev <= 1:
+            warnings.warn(
+                "stream_shard is a no-op: only one local device is visible. "
+                "For CPU scaling runs set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+                "importing jax.",
+                RuntimeWarning,
+            )
+        elif cfg.n_active % n_dev:
+            warnings.warn(
+                f"stream_shard falling back to a single-device scan: "
+                f"cohort size {cfg.n_active} does not divide across "
+                f"{n_dev} devices.",
+                RuntimeWarning,
+            )
     if masked and (cfg.async_buffer or cfg.participation < 1.0):
         raise ValueError(
             "masked (fused heterogeneous-M) contexts require synchronous "
@@ -228,17 +273,23 @@ def make_context(
 
 
 def init_state(ctx: RoundContext, b_init=None) -> RoundState:
-    """Fresh run state; ``b_init`` overrides the config's (may be traced)."""
+    """Fresh run state; ``b_init`` overrides the config's (may be traced).
+
+    ``stateless_clients`` collapses the per-client state planes to one
+    broadcast row — clients train from ``w_global`` each round and carry
+    nothing, so the server holds O(d) state however large M grows.
+    """
     cfg = ctx.cfg
     if b_init is None:
         b = init_b_state(cfg.bctrl)
     else:
         b = BState(b=jnp.asarray(b_init, jnp.float32), prev_vote=jnp.float32(0.0))
+    n_rows = 1 if cfg.stateless_clients else cfg.n_clients
     return RoundState(
         w_global=ctx.w0,
-        w_locals=jnp.tile(ctx.w0[None], (cfg.n_clients, 1)),
+        w_locals=jnp.tile(ctx.w0[None], (n_rows, 1)),
         b=b,
-        residuals=jnp.zeros((cfg.n_clients, ctx.w0.shape[0]), jnp.float32),
+        residuals=jnp.zeros((n_rows, ctx.w0.shape[0]), jnp.float32),
     )
 
 
@@ -276,8 +327,12 @@ def init_run_state(ctx: RoundContext, b_init=None):
 
 
 def round_fn(ctx: RoundContext):
-    """The round function matching the context (sync or buffered-async)."""
-    return async_fl_round if ctx.cfg.async_buffer else fl_round
+    """The round function matching the context (sync, streamed, or async)."""
+    if ctx.cfg.async_buffer:
+        return async_fl_round
+    if ctx.cfg.client_chunk:
+        return stream_fl_round
+    return fl_round
 
 
 def cell_params(cfg) -> CellParams:
@@ -309,13 +364,44 @@ def client_mask(ctx: RoundContext, params: CellParams) -> jax.Array | None:
     ).astype(jnp.float32)
 
 
-def round_batches(ctx: RoundContext, key: jax.Array) -> dict:
-    """Sample one round's local-training batches for every client."""
+def _batch_steps(ctx: RoundContext) -> int:
     cfg = ctx.cfg
     per_client = ctx.client_x.shape[1]
-    steps = max(cfg.local_epochs * per_client // cfg.batch_size, 1)
-    idx = jax.random.randint(
-        key, (cfg.n_clients, steps, cfg.batch_size), 0, per_client
+    return max(cfg.local_epochs * per_client // cfg.batch_size, 1)
+
+
+def _client_batch_idx(ctx: RoundContext, key: jax.Array, client_id) -> jax.Array:
+    """Client ``client_id``'s batch indices for the round keyed by ``key``.
+
+    Keyed by *global client id* via ``fold_in``, not a position in one
+    blocked ``(n_clients, ...)`` draw — so the streaming round can draw
+    any client's batches inside its chunk scan and get exactly the indices
+    the dense round drew for that client (``jax_threefry_partitionable``
+    makes the fold_in schedule stable across chunkings).
+    """
+    cfg = ctx.cfg
+    per_client = ctx.client_x.shape[1]
+    return jax.random.randint(
+        jax.random.fold_in(key, client_id),
+        (_batch_steps(ctx), cfg.batch_size),
+        0,
+        per_client,
+    )
+
+
+def round_batches(ctx: RoundContext, key: jax.Array) -> dict:
+    """Sample one round's local-training batches for every client.
+
+    Streaming contexts (``client_chunk > 0``) defer the draw: the chunk
+    scan materializes only its own C clients' batches, so the full
+    ``(n_clients, steps, batch)`` gather never exists — the round key is
+    passed through instead.
+    """
+    cfg = ctx.cfg
+    if cfg.client_chunk:
+        return {"key": key}
+    idx = jax.vmap(lambda m: _client_batch_idx(ctx, key, m))(
+        jnp.arange(cfg.n_clients)
     )
     bx = jax.vmap(lambda x, i: x[i])(ctx.client_x, idx)
     by = jax.vmap(lambda y, i: y[i])(ctx.client_y, idx)
@@ -433,6 +519,312 @@ def fl_round(
         ctx, state, sel, w_new, loss_before, loss_after, res_new,
         theta, deltas_att, RoundState, mask=mask,
     )
+
+
+def _scan_chunks(
+    ctx: RoundContext,
+    params: CellParams,
+    kb: jax.Array,
+    k_att: jax.Array,
+    k_q: jax.Array,
+    w_global: jax.Array,
+    b_scalar: jax.Array,
+    w_locals: jax.Array | None,
+    residuals: jax.Array | None,
+    sel_rows: jax.Array,
+    client_x: jax.Array,
+    client_y: jax.Array,
+    data_offset,
+    row0,
+    limit,
+    n_byz: int,
+    weighted: bool,
+) -> dict:
+    """Scan one shard of the client axis in chunks of ``cfg.client_chunk``.
+
+    ``sel_rows`` are the shard's selected client ids in cohort order;
+    ``row0`` is the global cohort position of its first row (device
+    ``k`` of a sharded scan passes ``k * n_local``), which keys the
+    per-row quantizer streams, Byzantine membership, and wire flips;
+    ``data_offset`` maps client ids to rows of the (possibly device-local)
+    ``client_x`` block. Rows at cohort position >= ``limit`` carry weight
+    zero (fused heterogeneous-M masks and chunk padding alike).
+
+    Returns the additive carries: the stream accumulator ``acc`` (packed
+    vote counts / weighted dense sum / row buffer, per the server's
+    ``stream_kind``), the b-controller vote, the loss and delta sums, the
+    effective cohort weight ``wsum``, and — stateful mode only — the
+    written-back per-client planes. Every carry except the fed_gm row
+    buffer is O(d), which is the streaming memory bound.
+    """
+    cfg = ctx.cfg
+    C = cfg.client_chunk
+    d = ctx.d
+    server = ctx.pipeline.server
+    kind = server.stream_kind
+    n_loc = sel_rows.shape[0]
+    n_chunks = -(-n_loc // C)
+    n_pad = n_chunks * C
+    # Padded tail rows wrap onto earlier clients; their weight is zero and
+    # their state write-back is dropped, so the duplicates are inert.
+    sel_p = sel_rows[jnp.arange(n_pad) % n_loc]
+    stateless = cfg.stateless_clients
+    steps = _batch_steps(ctx)
+
+    if kind == "counts":
+        p_bytes = ctx.pipeline.compressor.wire_bytes(d)
+        acc0 = server.init_counts(p_bytes, weighted=weighted)
+    elif kind == "sum":
+        acc0 = server.init_stream_sum(d)
+    else:  # "buffer" — fed_gm touches every row per Weiszfeld iteration
+        acc0 = jnp.zeros((n_pad, d), jnp.float32)
+
+    carry0 = dict(
+        acc=acc0,
+        vote=jnp.float32(0.0),
+        loss=jnp.float32(0.0),
+        dsum=jnp.zeros((d,), jnp.float32),
+        wsum=jnp.float32(0.0),
+    )
+    if not stateless:
+        carry0["w_locals"] = w_locals
+        carry0["residuals"] = residuals
+
+    def body(carry, g0):
+        local = g0 + jnp.arange(C)  # shard-local row positions
+        gidx = row0 + local  # global cohort positions
+        sel_c = jax.lax.dynamic_slice(sel_p, (g0,), (C,))
+        # Padded tail rows must mask on the *local* axis: a sharded scan's
+        # pad rows carry global positions that run into the next shard's
+        # range, where `gidx < limit` alone would leave them weighted.
+        w_c = ((gidx < limit) & (local < n_loc)).astype(jnp.float32)
+
+        idx = jax.vmap(lambda m: _client_batch_idx(ctx, kb, m))(sel_c)
+        rows = sel_c - data_offset
+        bx = jax.vmap(lambda r, i: client_x[r][i])(rows, idx)
+        by = jax.vmap(lambda r, i: client_y[r][i])(rows, idx)
+
+        if stateless:
+            w_start = jnp.broadcast_to(w_global, (C, d))
+            res_c = jnp.zeros((C, d), jnp.float32)
+        else:
+            w_start = carry["w_locals"][sel_c]
+            res_c = carry["residuals"][sel_c]
+
+        def client(w_local, cb):
+            return local_prox_train(
+                ctx.loss_fn,
+                w_global,
+                w_local,
+                ctx.unravel,
+                cb,
+                lr=params.lr,
+                mu=params.momentum,
+                lam=params.lam,
+                use_kernel=cfg.use_kernels,
+            )
+
+        w_new, loss_before, loss_after = jax.vmap(client)(
+            w_start, {"x": bx, "y": by}
+        )
+        deltas = w_new - w_global[None]
+        deltas_att = apply_attack_stream(
+            params.attack_id, k_att, deltas, gidx < n_byz, gidx
+        )
+        wire, res_new = ctx.pipeline.compress_wire(
+            k_q,
+            deltas_att,
+            b_scalar,
+            res_c,
+            flip_n=ctx.flip_n,
+            flip_gate=params.flip_gate,
+            row_offset=row0 + g0,
+        )
+
+        if kind == "counts":
+            acc = server.accumulate_counts(
+                carry["acc"], wire.packed, w_c if weighted else None
+            )
+        elif kind == "sum":
+            acc = server.accumulate_sum(carry["acc"], wire.updates, w_c)
+        else:
+            acc = jax.lax.dynamic_update_slice(
+                carry["acc"], wire.updates, (g0, 0)
+            )
+
+        bits = jax.vmap(loss_bit)(loss_before, loss_after).astype(jnp.float32)
+        new = dict(
+            acc=acc,
+            vote=carry["vote"] + jnp.sum(bits * w_c),
+            loss=carry["loss"] + jnp.sum(loss_after * w_c),
+            dsum=carry["dsum"] + jnp.sum(deltas_att * w_c[:, None], axis=0),
+            wsum=carry["wsum"] + jnp.sum(w_c),
+        )
+        if not stateless:
+            # mode="drop": padded wrap rows target index n_clients (out of
+            # bounds) so they cannot clobber a real client's row.
+            tgt = jnp.where(local < n_loc, sel_c, cfg.n_clients)
+            new["w_locals"] = carry["w_locals"].at[tgt].set(w_new, mode="drop")
+            new["residuals"] = (
+                carry["residuals"].at[tgt].set(res_new, mode="drop")
+            )
+        return new, None
+
+    carry, _ = jax.lax.scan(body, carry0, jnp.arange(n_chunks) * C)
+    return carry
+
+
+def _stream_shard_devices(ctx: RoundContext) -> int:
+    """How many devices the streaming scan shards over (1 = unsharded)."""
+    cfg = ctx.cfg
+    if not cfg.stream_shard:
+        return 1
+    n_dev = len(jax.devices())
+    if n_dev <= 1 or cfg.n_active % n_dev:
+        return 1
+    return n_dev
+
+
+def _sharded_scan(
+    ctx: RoundContext,
+    params: CellParams,
+    kb: jax.Array,
+    k_att: jax.Array,
+    k_q: jax.Array,
+    w_global: jax.Array,
+    b_scalar: jax.Array,
+    limit,
+    n_byz: int,
+    weighted: bool,
+    n_dev: int,
+) -> dict:
+    """:func:`_scan_chunks` sharded over the campaign mesh's client slices.
+
+    Each device scans its contiguous ``n_active / n_dev`` client rows
+    (``stream_shard`` validation pins participation to 1.0, so cohort
+    position == client id and the client data shards as plain blocks) and
+    the additive carries ``psum`` — the weighted-count reduction is the
+    only cross-device collective. Stateful planes are excluded by the
+    ``stateless_clients`` requirement.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from ..launch.mesh import make_campaign_mesh
+
+    cfg = ctx.cfg
+    n_loc = cfg.n_active // n_dev
+    mesh = make_campaign_mesh(n_dev)
+
+    def body(cx, cy, kb_, ka_, kq_, wg, bs, lim, prm):
+        k = jax.lax.axis_index("data")
+        row0 = k * n_loc
+        sel_rows = row0 + jnp.arange(n_loc)
+        carry = _scan_chunks(
+            ctx, prm, kb_, ka_, kq_, wg, bs, None, None,
+            sel_rows, cx, cy, row0, row0, lim, n_byz, weighted,
+        )
+        return jax.tree.map(lambda x: jax.lax.psum(x, "data"), carry)
+
+    in_specs = (P("data"), P("data")) + (P(),) * 7
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=P())
+    if hasattr(jax, "shard_map"):
+        fn = jax.shard_map(body, check_vma=False, **kwargs)
+    else:
+        from jax.experimental.shard_map import shard_map
+
+        fn = shard_map(body, check_rep=False, **kwargs)
+    return fn(
+        ctx.client_x, ctx.client_y, kb, k_att, k_q,
+        w_global, b_scalar, jnp.asarray(limit, jnp.int32), params,
+    )
+
+
+def stream_fl_round(
+    ctx: RoundContext,
+    params: CellParams,
+    key: jax.Array,
+    state: RoundState,
+    batches: dict,
+) -> tuple[RoundState, dict]:
+    """One synchronous FL round under the chunked (streaming) client axis.
+
+    Protocol-identical to :func:`fl_round` — same participation sampling,
+    RNG schedule, attack semantics, estimate, b-vote, and metrics — but
+    executed as a ``lax.scan`` over ``cfg.client_chunk``-client chunks:
+    the wire and update matrices exist only chunk-sized, and the server
+    carries additive accumulators (see :func:`_scan_chunks`). Count-
+    streaming schemes are bit-identical to the dense round in eager mode;
+    jit agreement is 1e-6 (reassociation of f32 partial sums only —
+    integer vote counts are exact under any chunking).
+    """
+    cfg = ctx.cfg
+    n = cfg.n_active
+    C = cfg.client_chunk
+    d = ctx.d
+    server = ctx.pipeline.server
+    kind = server.stream_kind
+    kb = batches["key"]
+
+    if cfg.participation < 1.0:
+        sel = jax.random.choice(
+            jax.random.fold_in(key, 99), cfg.n_clients,
+            (n,), replace=False,
+        )
+    else:
+        sel = jnp.arange(cfg.n_clients)
+    k_att, k_q = jax.random.split(jax.random.fold_in(key, 1))
+    n_byz = int(n * cfg.byz_frac)
+    limit = jnp.asarray(params.m_active) if ctx.masked else n
+
+    n_dev = _stream_shard_devices(ctx)
+    n_loc = n // n_dev
+    weighted = ctx.masked or (-(-n_loc // C)) * C != n_loc
+    if n_dev > 1:
+        carry = _sharded_scan(
+            ctx, params, kb, k_att, k_q, state.w_global, state.b.b,
+            limit, n_byz, weighted, n_dev,
+        )
+    else:
+        carry = _scan_chunks(
+            ctx, params, kb, k_att, k_q, state.w_global, state.b.b,
+            None if cfg.stateless_clients else state.w_locals,
+            None if cfg.stateless_clients else state.residuals,
+            sel, ctx.client_x, ctx.client_y, 0, 0, limit, n_byz, weighted,
+        )
+
+    acc, vote, wsum = carry["acc"], carry["vote"], carry["wsum"]
+    if kind == "counts":
+        b_vec = ctx.pipeline.compressor.b_vector(d, state.b.b)
+        if weighted:
+            est = server.finalize(acc, jnp.maximum(wsum, 1e-12), b_vec)
+            theta = jnp.where(wsum > 0, est, 0.0)
+        else:
+            theta = server.finalize(acc, n, b_vec)
+    elif kind == "sum":
+        theta = server.finalize_sum(acc)
+    else:
+        w_all = (jnp.arange(acc.shape[0]) < limit).astype(jnp.float32)
+        theta = server.from_dense(acc, w_all if weighted else None)
+
+    b_new = update_b_from_vote(state.b, vote, cfg.bctrl)
+    new_state = RoundState(
+        w_global=state.w_global + theta,
+        w_locals=(
+            state.w_locals if cfg.stateless_clients else carry["w_locals"]
+        ),
+        b=b_new,
+        residuals=(
+            state.residuals if cfg.stateless_clients else carry["residuals"]
+        ),
+    )
+    m_eff = jnp.maximum(wsum, 1.0)
+    delta_mean = carry["dsum"] / m_eff
+    metrics = {
+        "loss": carry["loss"] / m_eff,
+        "b": b_new.b,
+        "theta_mse": jnp.mean((theta - delta_mean) ** 2),
+    }
+    return new_state, metrics
 
 
 def async_fl_round(
@@ -566,7 +958,10 @@ def run_rounds(
     :func:`async_fl_round`, a :class:`RoundState` the synchronous round.
     """
     rounds = rounds or ctx.cfg.rounds
-    step = async_fl_round if isinstance(state, AsyncRoundState) else fl_round
+    if isinstance(state, AsyncRoundState):
+        step = async_fl_round
+    else:
+        step = stream_fl_round if ctx.cfg.client_chunk else fl_round
 
     def body(carry, _):
         key, state = carry

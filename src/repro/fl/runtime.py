@@ -107,6 +107,26 @@ class FLConfig:
     agg_step: float = 0.01  # server step for signSGD-MV / RSA
     gm_iters: int = 16
     use_kernels: bool = False
+    # Streaming client axis (ROADMAP item). 0 = dense round (the whole
+    # (M, d) update matrix and (M, d_pad/8) wire materialize at once);
+    # C > 0 scans the cohort in chunks of C clients, accumulating packed
+    # vote counts — resident memory drops from O(M * d/8) to O(C * d/8).
+    # Per-client PRNG is counter-derived, so for count-streaming schemes
+    # the chunked round is bit-identical to the dense one in eager mode
+    # (<= 1e-6 under jit, the PR-3 reassociation precedent).
+    client_chunk: int = 0
+    # With client_chunk > 0: drop per-client persistent state (w_locals /
+    # residuals collapse to a single broadcast row). Clients train from
+    # w_global each round — the cross-device regime where M is far larger
+    # than any per-client state the server could hold. Required for
+    # stream_shard and for M beyond host memory.
+    stateless_clients: bool = False
+    # Packer d-chunk override (0 = quantizer.PACK_CHUNK). The streaming
+    # benchmark shrinks it so the per-chunk scratch stays cache-sized.
+    pack_chunk: int = 0
+    # Shard the client axis of each chunk scan across the campaign mesh
+    # (launch/mesh.make_campaign_mesh) via the weighted-count reduction.
+    stream_shard: bool = False
     seed: int = 0
 
     def __post_init__(self):
@@ -176,6 +196,69 @@ class FLConfig:
                     f"({self.n_active} clients); slots beyond one per client "
                     "would never be written"
                 )
+        if self.client_chunk < 0:
+            raise ValueError(f"client_chunk must be >= 0, got {self.client_chunk}")
+        if self.pack_chunk < 0 or self.pack_chunk % 8:
+            raise ValueError(
+                f"pack_chunk must be a non-negative multiple of 8, "
+                f"got {self.pack_chunk}"
+            )
+        if self.client_chunk:
+            if self.async_buffer:
+                raise ValueError(
+                    "client_chunk streams the synchronous round; the "
+                    "buffered-async server holds a persistent wire buffer "
+                    "and cannot stream (set async_buffer=0)"
+                )
+            if self.topk_frac < 1.0:
+                raise ValueError(
+                    "client_chunk requires the dense packed wire; "
+                    "topk_frac < 1 (SparseWire) has no count accumulator"
+                )
+            if self.b_mode == "oracle":
+                raise ValueError(
+                    "b_mode='oracle' maxes |delta| over the full cohort and "
+                    "cannot stream; use 'dynamic' or 'fixed' with client_chunk"
+                )
+            if self.byz_frac > 0:
+                from ..core.attacks import STREAM_ATTACKS
+
+                payload, _ = parse_attack(self.attack)
+                if payload not in STREAM_ATTACKS:
+                    raise ValueError(
+                        f"attack {self.attack!r} colludes across the cohort "
+                        f"and cannot run under a client-chunk scan; "
+                        f"streamable attacks: {tuple(sorted(STREAM_ATTACKS))}"
+                    )
+        if self.stateless_clients:
+            if not self.client_chunk:
+                raise ValueError("stateless_clients requires client_chunk > 0")
+            if self.error_feedback:
+                raise ValueError(
+                    "error feedback carries a per-client residual across "
+                    "rounds and contradicts stateless_clients"
+                )
+        if self.stream_shard:
+            if not self.client_chunk:
+                raise ValueError("stream_shard requires client_chunk > 0")
+            if not self.stateless_clients:
+                raise ValueError(
+                    "stream_shard requires stateless_clients: scattering "
+                    "per-client state back from device-local chunk rows "
+                    "is not supported"
+                )
+            if self.participation < 1.0:
+                raise ValueError(
+                    "stream_shard requires participation == 1.0 (the static "
+                    "client-data shard layout cannot follow a resampled "
+                    "cohort)"
+                )
+            if self.aggregator == "fed_gm":
+                raise ValueError(
+                    "fed_gm buffers all rows (stream_kind='buffer') and "
+                    "cannot reduce across shards; pick a count- or "
+                    "sum-streaming aggregator"
+                )
 
     @property
     def n_active(self) -> int:
@@ -218,6 +301,8 @@ class FLConfig:
 
     def pipeline(self):
         """The shared :class:`repro.core.AggregatorPipeline` for this run."""
+        from ..core.quantizer import PACK_CHUNK
+
         return build_pipeline(
             self.aggregator,
             dp=self.dp,
@@ -227,6 +312,7 @@ class FLConfig:
             agg_step=self.agg_step,
             gm_iters=self.gm_iters,
             use_kernels=self.use_kernels,
+            chunk=self.pack_chunk or PACK_CHUNK,
         )
 
 

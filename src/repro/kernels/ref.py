@@ -32,7 +32,15 @@ def stoch_quant_pack_ref(
 
 
 def bit_aggregate_ref(packed: jax.Array, b: jax.Array) -> jax.Array:
-    """Unpack M clients' packed codes, popcount-sum, ML-estimate (Eq. 13).
+    """Popcount-sum M clients' packed codes, then ML-estimate (Eq. 13).
+
+    The vote count is a per-coordinate *column* sum of the bit matrix, so
+    ``population_count`` (which sums a byte's 8 bits, i.e. across 8
+    coordinates) applies after an octet bit-transpose: 8 clients' bit-k's
+    re-pack into one client-major byte whose popcount counts 8 votes at
+    once (uint8 LUT fallback via
+    :func:`repro.core.quantizer.byte_popcount`). Integer counts are
+    identical to the unpack-and-sum reduction.
 
     Args:
       packed: (M, N // 8) uint8.
@@ -40,10 +48,15 @@ def bit_aggregate_ref(packed: jax.Array, b: jax.Array) -> jax.Array:
     Returns:
       (N,) float32 — theta_hat = (2 N_i - M) / M * b_i.
     """
-    m = packed.shape[0]
+    from ..core.quantizer import byte_popcount
+
+    m, pbytes = packed.shape
+    pad = (-m) % 8
+    x = jnp.pad(packed, ((0, pad), (0, 0))).reshape(-1, 8, pbytes)
     shifts = jnp.arange(8, dtype=jnp.uint8)
-    bits = (packed[..., None] >> shifts) & jnp.uint8(1)  # (M, N//8, 8)
-    counts = jnp.sum(bits.astype(jnp.int32), axis=0).reshape(-1)  # (N,)
+    bit_k = (x[:, :, :, None] >> shifts) & jnp.uint8(1)  # (G, 8, N//8, 8)
+    octet = jnp.sum(bit_k << shifts[None, :, None, None], axis=1, dtype=jnp.uint8)
+    counts = jnp.sum(byte_popcount(octet).astype(jnp.int32), axis=0).reshape(-1)
     return (2.0 * counts - m) / m * b.astype(jnp.float32)
 
 

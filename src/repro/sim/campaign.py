@@ -271,6 +271,33 @@ class _GroupFusionError(Exception):
     """A fused group's cells turned out not to share a batchable task."""
 
 
+def _peak_bytes_est(ctx, n_elems_per_dev: int) -> int:
+    """Estimated peak resident bytes of one device's aggregation path.
+
+    Padded wire rows + the server's accumulator, per (cell, seed) element,
+    times the elements a device carries. Dense rounds hold all
+    ``n_clients`` wire rows; streamed rounds hold one ``client_chunk``-row
+    chunk plus the O(d) count/sum carry (fed_gm's buffer kind still holds
+    every row — streaming it is a parity fallback, not a memory win).
+    Reported per group in the campaign JSON so streaming-vs-dense memory
+    is visible without a profiler.
+    """
+    cfg = ctx.cfg
+    d = ctx.d
+    rows = cfg.client_chunk or cfg.n_clients
+    p_bytes = ctx.pipeline.compressor.wire_bytes(d)
+    kind = ctx.pipeline.server.stream_kind
+    if p_bytes is None:  # dense wire (FedAvg / Fed-GM)
+        if cfg.client_chunk and kind == "buffer":
+            rows = cfg.n_clients
+        wire = rows * d * 4
+        acc = d * 4
+    else:
+        wire = rows * p_bytes
+        acc = 8 * p_bytes * 4  # one int32/f32 vote count per padded bit
+    return n_elems_per_dev * (wire + acc)
+
+
 def _prepare_group(
     group: PlanGroup,
     cfgs: list[FLConfig],
@@ -309,6 +336,12 @@ def _prepare_group(
                 f"{[spec.cells[i].name for i in group.cell_idx]}"
             )
         ctx_cfg = dataclasses.replace(group_cfgs[0], n_clients=group.m_pad)
+        if group.client_chunk and ctx_cfg.client_chunk == 0:
+            # Planner-chosen streaming: the padded client axis exceeded
+            # the stream threshold, so the group's rounds scan chunks.
+            ctx_cfg = dataclasses.replace(
+                ctx_cfg, client_chunk=group.client_chunk
+            )
         ctx = R.make_context(
             ctx_cfg, rep.init_params, rep.loss_fn, rep.acc_fn,
             cxs[0], cys[0], rep.test, wire_flip=wire_flip, masked=True,
@@ -335,8 +368,13 @@ def _prepare_group(
         keepalive = _task_leaves(rep, with_clients=False)
     else:
         task = task_fn(group_cfgs[0])
+        ctx_cfg = group_cfgs[0]
+        if group.client_chunk and ctx_cfg.client_chunk == 0:
+            ctx_cfg = dataclasses.replace(
+                ctx_cfg, client_chunk=group.client_chunk
+            )
         ctx = R.make_context(
-            group_cfgs[0], task.init_params, task.loss_fn, task.acc_fn,
+            ctx_cfg, task.init_params, task.loss_fn, task.acc_fn,
             task.client_x, task.client_y, task.test, wire_flip=wire_flip,
         )
         params, keys, states = _batched_inputs(ctx, group_cfgs, spec.seeds)
@@ -361,11 +399,12 @@ def _prepare_group(
             bcast = tuple(jax.device_put(x, replicated) for x in bcast)
 
     key = (
-        group.signature, group.m_pad, group.fused, wire_flip,
-        with_acc, n_dev, task_fp,
+        group.signature, group.m_pad, group.fused, group.client_chunk,
+        wire_flip, with_acc, n_dev, task_fp,
     )
+    peak_bytes = _peak_bytes_est(ctx, -(-n_padded // n_dev))
     fn = jax.vmap(cell_fn, in_axes=in_axes)
-    return fn, batched + bcast, key, keepalive, n, n_padded, n_dev
+    return fn, batched + bcast, key, keepalive, n, n_padded, n_dev, peak_bytes
 
 
 def _demote_group(group: PlanGroup, cfgs: list[FLConfig]) -> list[PlanGroup]:
@@ -439,9 +478,11 @@ def run_campaign(
     while worklist:
         group = worklist.pop(0)
         try:
-            fn, args, key, keepalive, n, n_padded, n_dev = _prepare_group(
-                group, cfgs, spec, task_fn,
-                with_acc=with_acc, shard=plan.shard, cache=cache,
+            fn, args, key, keepalive, n, n_padded, n_dev, peak_bytes = (
+                _prepare_group(
+                    group, cfgs, spec, task_fn,
+                    with_acc=with_acc, shard=plan.shard, cache=cache,
+                )
             )
         except _GroupFusionError as e:
             warnings.warn(
@@ -461,7 +502,7 @@ def run_campaign(
             dict(
                 group=group, out=out, n=n, n_padded=n_padded, n_dev=n_dev,
                 t_dispatch=t_dispatch, compile_s=t_compile,
-                cache_hit=cache.hits > hits_before,
+                cache_hit=cache.hits > hits_before, peak_bytes=peak_bytes,
             )
         )
 
@@ -495,6 +536,10 @@ def run_campaign(
             "cache_hit": L["cache_hit"],
             "fused": group.fused,
             "m_pad": group.m_pad,
+            "client_chunk": (
+                group.client_chunk or cfgs[group.cell_idx[0]].client_chunk
+            ),
+            "peak_bytes_est": L["peak_bytes"],
             "n_devices": L["n_dev"],
             "n_elems": L["n"],
             "n_elems_padded": L["n_padded"],

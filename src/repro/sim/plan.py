@@ -52,7 +52,21 @@ __all__ = [
     "plan_campaign",
     "CompileCache",
     "default_compile_cache",
+    "STREAM_M_THRESHOLD",
+    "STREAM_CHUNK",
 ]
+
+# Above this padded client count, a fusable group's rounds execute
+# streamed (lax.scan over client chunks) instead of dense: the full
+# (M, d_pad/8) wire would dominate memory while the chunked scan keeps it
+# at O(STREAM_CHUNK * d/8). Below it, dense vmapped rounds are faster
+# (no scan overhead) and memory is irrelevant. Fusable cells are always
+# safe to stream: byz_frac == 0 (no colluding-attack restriction),
+# participation == 1, synchronous, non-oracle b.
+STREAM_M_THRESHOLD = 4096
+
+# The client-chunk size the planner picks when it streams a group.
+STREAM_CHUNK = 1024
 
 
 def fusable(cfg: FLConfig) -> bool:
@@ -105,6 +119,12 @@ class PlanGroup:
     cell_idx: tuple[int, ...]
     m_pad: int
     fused: bool
+    # Planner-chosen streaming chunk: > 0 makes the executor run the
+    # group's rounds under the chunked client scan (stream_fl_round) with
+    # this chunk size. 0 = dense rounds, or the members already request a
+    # chunk through FLConfig.client_chunk (which joins the signature and
+    # is never overridden here).
+    client_chunk: int = 0
 
     @property
     def n_cells(self) -> int:
@@ -142,13 +162,20 @@ class CampaignPlan:
         ]
         for g in self.groups:
             kind = f"fused@M<={g.m_pad}" if g.fused else f"M={g.m_pad}"
+            if g.client_chunk:
+                kind += f", stream@{g.client_chunk}"
             names = ", ".join(self.spec.cells[i].name for i in g.cell_idx)
             lines.append(f"  [{kind}] {g.n_cells} cells: {names}")
         return "\n".join(lines)
 
 
 def plan_campaign(
-    spec, *, fuse_m: bool = True, shard: bool = False
+    spec,
+    *,
+    fuse_m: bool = True,
+    shard: bool = False,
+    stream_threshold: int = STREAM_M_THRESHOLD,
+    stream_chunk: int = STREAM_CHUNK,
 ) -> CampaignPlan:
     """Lower a spec into a :class:`CampaignPlan`.
 
@@ -157,6 +184,14 @@ def plan_campaign(
     :func:`fused_signature` instead, merging an M-sweep into one program.
     ``fuse_m=False`` reproduces the pre-planner per-signature grouping for
     every cell (the parity baseline the fused path is tested against).
+
+    Streaming is the plan's third decision: a fusable-keyed bucket whose
+    padded client count exceeds ``stream_threshold`` gets
+    ``client_chunk = stream_chunk`` — its rounds execute as the chunked
+    client scan with O(stream_chunk * d/8) wire memory instead of
+    materializing the (m_pad, d_pad/8) matrix. Cells that set
+    ``FLConfig.client_chunk`` themselves keep their explicit chunk (it is
+    part of the trace signature and never overridden).
     """
     from .campaign import group_signature
 
@@ -172,15 +207,23 @@ def plan_campaign(
     groups = []
     for key, idxs in buckets.items():
         m_values = {cfgs[i].n_clients for i in idxs}
+        m_pad = max(m_values)
+        stream = (
+            key[0] == "fused"
+            and stream_chunk > 0
+            and m_pad > stream_threshold
+            and cfgs[idxs[0]].client_chunk == 0
+        )
         groups.append(
             PlanGroup(
                 signature=key,
                 cell_idx=tuple(idxs),
-                m_pad=max(m_values),
+                m_pad=m_pad,
                 # A single-M bucket runs the exact unmasked program even
                 # when it bucketed by fused signature — masking would only
                 # add traced-M overhead for nothing.
                 fused=len(m_values) > 1,
+                client_chunk=min(stream_chunk, m_pad) if stream else 0,
             )
         )
     return CampaignPlan(
