@@ -1,20 +1,79 @@
-"""Kernel + pipeline microbenchmarks: us/call of the Pallas paths
-(interpret mode on this CPU container — wall numbers are for CI tracking,
-not TPU projection) plus the measured wire/memory traffic of the packed
-aggregation pipeline vs the dense reference path."""
+"""Kernel + pipeline microbenchmarks with dispatch metadata and a roofline.
+
+Times the ``use_kernels=True`` wire against the pure-JAX packed wire and
+stamps *what actually ran* — backend, resolved dispatch engine, interpret
+flag — into the report JSON, so an interpret-mode emulator number can
+never masquerade as a kernel result again (a prior report did exactly
+that: ~6.4 s interpret-mode Pallas recorded as the "kernel" pipeline vs
+~56 ms pure-JAX).
+
+Sections of ``reports/bench_results.json``:
+
+* ``meta``    — backend, dispatch engine, interpret, problem size;
+* ``kernels`` — the us/call numbers (same keys as before);
+* ``roofline`` — a measured memcpy bandwidth bound plus, per stage, the
+  bytes the stage must move, achieved bytes/s, and the achieved/bound
+  fraction. A stage at fraction ~1 is memory-bound (the best a 1-bit wire
+  can do); a small fraction means compute or launch overhead dominates.
+
+Guard rails: when the kernel/pure-JAX pipeline ratio exceeds
+``RATIO_THRESHOLD`` the script prints a ``::warning::`` line (picked up by
+the nightly CI log); ``--smoke`` runs a small size and *fails* (exit 1) on
+the same condition — the per-push regression gate for the dispatch policy.
+"""
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
 
 from .common import emit, timed
 
-import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core import build_pipeline, padded_dim, probit_plus_from_updates  # noqa: E402
 from repro.core.quantizer import packed_counts  # noqa: E402
 from repro.kernels import ops  # noqa: E402
+
+# use_kernels=True must stay within this factor of the pure-JAX packed
+# wire on every backend; beyond it the dispatch policy has regressed.
+RATIO_THRESHOLD = 1.5
+
+
+def report_meta(n: int, m: int) -> dict:
+    engine = ops.resolve_engine()
+    return {
+        "backend": jax.default_backend(),
+        "dispatch_engine": engine,
+        "interpret": engine == "interpret",
+        "n": n,
+        "m": m,
+    }
+
+
+def memcpy_bound_gbs(nbytes: int = 1 << 26) -> float:
+    """Measured streaming-bandwidth bound: GB/s of a jitted f32 a+1 copy
+    (reads + writes ``nbytes`` each). Every wire stage below is held to
+    this number, not a datasheet figure."""
+    x = jnp.zeros(nbytes // 4, jnp.float32)
+    run = jax.jit(lambda v: v + 1.0)
+    us = timed(lambda: run(x), reps=10)
+    return 2.0 * nbytes / (us * 1e-6) / 1e9
+
+
+def _stage(us: float, nbytes: float, bound_gbs: float) -> dict:
+    achieved = nbytes / (us * 1e-6) / 1e9
+    return {
+        "bytes": int(nbytes),
+        "us": us,
+        "achieved_gbs": achieved,
+        "bound_gbs": bound_gbs,
+        "frac_of_bound": achieved / bound_gbs if bound_gbs > 0 else 0.0,
+    }
 
 
 def popcount_counts(n: int = 262_144, m: int = 256) -> dict:
@@ -23,8 +82,8 @@ def popcount_counts(n: int = 262_144, m: int = 256) -> dict:
     Both produce identical integer counts from the same (M, n/8) uint8
     wire; the popcount path transposes octets of client rows and reduces
     whole bytes, the reference path unpacks each bit to int8 first. The
-    measured ratio is the satellite number for the streaming-aggregation
-    PR (the count reduction runs once per client chunk there).
+    in-kernel ``bit_aggregate`` vote count now rides the same popcount
+    reduction (octet transpose + ``jax.lax.population_count``).
     """
     key = jax.random.PRNGKey(3)
     packed = jax.random.randint(key, (m, n // 8), 0, 256, jnp.uint8)
@@ -52,6 +111,10 @@ def pipeline_traffic(n: int = 262_144, m: int = 16) -> dict:
       * dense int8 codes: M * n bytes (sign bytes, signSGD-style);
       * packed wire: (M, P) uint8, P = ceil(n/8 per alignment) -> ~M * n/8
         bytes — 8x below int8 codes, 32x below f32 codes.
+
+    The kernel pipeline runs whatever engine the dispatch policy resolves
+    for this backend (TPU -> Pallas, else the pure-JAX ref wire); the
+    emitted ``kernel_vs_jax_ratio`` is the regression gate.
     """
     key = jax.random.PRNGKey(0)
     deltas = 0.01 * jax.random.normal(key, (m, n))
@@ -80,6 +143,10 @@ def pipeline_traffic(n: int = 262_144, m: int = 16) -> dict:
             f";vs_f32_codes={dense_f32_bytes / wire_bytes:.1f}x",
         )
 
+    ratio = out["pipeline_kernel_packed_us"] / out["pipeline_jax_packed_us"]
+    out["kernel_vs_jax_ratio"] = ratio
+    emit("kernel_vs_jax_ratio", ratio, f"threshold={RATIO_THRESHOLD}")
+
     # dense reference path (f32 codes materialized, pre-pipeline behavior)
     bvec = jnp.full((n,), 0.05)
     dense = jax.jit(lambda k, d: probit_plus_from_updates(k, d, bvec))
@@ -91,6 +158,42 @@ def pipeline_traffic(n: int = 262_144, m: int = 16) -> dict:
         f"M={m};n={n};codes_bytes_f32={dense_f32_bytes}",
     )
     return out
+
+
+def roofline_stages(n: int, m: int, kernels: dict) -> dict:
+    """Achieved-vs-bound bytes/s per wire stage, from the timings above.
+
+    Traffic models (the *minimum* HBM bytes each stage must move):
+      * stoch_quant:   read 4n delta + 4n b, write n/8 packed;
+      * bit_aggregate: read M*n/8 wire + 4n b, write 4n theta;
+      * counts:        read M*n/8 wire, write 4n counts;
+      * pipelines:     compress of M rows + aggregate.
+    """
+    bound = memcpy_bound_gbs()
+    per_client = 8.0 * n + n / 8.0
+    agg = m * n / 8.0 + 8.0 * n
+    stages = {
+        "stoch_quant": _stage(kernels["stoch_quant_pack"], per_client, bound),
+        "bit_aggregate": _stage(kernels["bit_aggregate"], agg, bound),
+        "counts_popcount": _stage(
+            kernels["counts_popcount_us"], 256 * n / 8.0 + 4.0 * n, bound
+        ),
+        "pipeline_kernel": _stage(
+            kernels["pipeline_kernel_packed_us"], m * per_client + agg, bound
+        ),
+        "pipeline_jax": _stage(
+            kernels["pipeline_jax_packed_us"], m * per_client + agg, bound
+        ),
+    }
+    for name, s in stages.items():
+        emit(
+            f"roofline_{name}",
+            s["us"],
+            f"achieved={s['achieved_gbs']:.2f}GB/s"
+            f";bound={s['bound_gbs']:.2f}GB/s"
+            f";frac={s['frac_of_bound']:.3f}",
+        )
+    return {"memcpy_bound_gbs": bound, "stages": stages}
 
 
 def main(n: int = 262_144, m: int = 16) -> dict:
@@ -120,21 +223,55 @@ def main(n: int = 262_144, m: int = 16) -> dict:
     emit("kernel_prox_sgd", us, "fused_passes=1_vs_4")
 
     out.update(pipeline_traffic(n, m))
-    out.update(popcount_counts(n))
+    out.update(popcount_counts(n, max(m, 256)))
     return out
+
+
+def run(n: int, m: int, out_path: str | None, smoke: bool) -> int:
+    kernels = main(n, m)
+    results = {
+        "meta": report_meta(n, m),
+        "kernels": kernels,
+        "roofline": roofline_stages(n, m, kernels),
+    }
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"# results written to {out_path}")
+    ratio = kernels["kernel_vs_jax_ratio"]
+    if ratio > RATIO_THRESHOLD:
+        print(
+            f"::warning::use_kernels=True pipeline is {ratio:.2f}x the "
+            f"pure-JAX packed wire on {jax.default_backend()} "
+            f"(engine={results['meta']['dispatch_engine']}, "
+            f"threshold={RATIO_THRESHOLD}x) — dispatch policy regression?"
+        )
+        if smoke:
+            return 1
+    return 0
 
 
 if __name__ == "__main__":
     # Standalone entry writes the same artifact path as benchmarks.run so
     # the nightly job can upload kernel numbers without the full figure
-    # sweep.
-    import json
-
-    results = {"kernels": main()}
-    report = os.path.join(
-        os.path.dirname(__file__), "..", "reports", "bench_results.json"
+    # sweep; --smoke is the per-push dispatch-policy regression gate.
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--n", type=int, default=262_144)
+    parser.add_argument("--m", type=int, default=16)
+    parser.add_argument(
+        "--smoke",
+        action="store_true",
+        help="small size, no artifact, exit 1 if kernel/jax ratio "
+        f"exceeds {RATIO_THRESHOLD}x",
     )
-    os.makedirs(os.path.dirname(report), exist_ok=True)
-    with open(report, "w") as f:
-        json.dump(results, f, indent=1, default=str)
-    print(f"# results written to {report}")
+    parser.add_argument(
+        "--out",
+        default=os.path.join(
+            os.path.dirname(__file__), "..", "reports", "bench_results.json"
+        ),
+    )
+    a = parser.parse_args()
+    if a.smoke:
+        a.n, a.m, a.out = 65_536, 8, None
+    sys.exit(run(a.n, a.m, a.out, a.smoke))

@@ -1,5 +1,10 @@
 """Roofline table formatter: reads the dry-run JSON reports and prints the
-per-(arch x shape x mesh) roofline terms + bottleneck + MODEL_FLOPS ratio.
+per-(arch x shape x mesh) roofline terms + bottleneck + MODEL_FLOPS ratio,
+plus the packed-wire kernel roofline from ``bench_results.json`` (written
+by ``benchmarks.kernels_micro``): per stage, the bytes it must move, the
+achieved bytes/s, and the fraction of the measured memcpy bandwidth bound
+— per backend and dispatch engine, so an interpret-mode number can never
+read as a kernel result.
 
 MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens processed:
   train_4k: global_batch*seq*(1+local recompute)  — we report plain 6ND
@@ -39,7 +44,55 @@ def load_reports(directory: str = "reports") -> list[dict]:
     return reps
 
 
+def load_wire_reports(directory: str = "reports") -> list[dict]:
+    reps = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        r = json.load(open(f))
+        if isinstance(r, dict) and "roofline" in r and "meta" in r:
+            reps.append(r)
+    return reps
+
+
+def wire_roofline(directory: str = "reports") -> None:
+    """Packed-wire stage roofline (from ``kernels_micro``'s report JSON).
+
+    ``frac`` ~ 1 means the stage runs at the measured streaming-bandwidth
+    bound — memory-bound, the best a 1-bit wire can do; a small ``frac``
+    means compute/launch overhead dominates and fusion should help.
+    """
+    reps = load_wire_reports(directory)
+    if not reps:
+        print(
+            "no wire-roofline reports found — run: "
+            "python -m benchmarks.kernels_micro"
+        )
+        return
+    for r in reps:
+        meta, roof = r["meta"], r["roofline"]
+        print(
+            f"\npacked-wire roofline: backend={meta['backend']} "
+            f"engine={meta['dispatch_engine']} interpret={meta['interpret']} "
+            f"n={meta['n']} M={meta['m']} "
+            f"memcpy_bound={roof['memcpy_bound_gbs']:.2f} GB/s"
+        )
+        hdr = (
+            f"{'stage':<18} {'us':>12} {'bytes':>14} "
+            f"{'achieved GB/s':>14} {'frac of bound':>14}"
+        )
+        print(hdr)
+        print("-" * len(hdr))
+        for name, s in roof["stages"].items():
+            print(
+                f"{name:<18} {s['us']:>12.1f} {s['bytes']:>14d} "
+                f"{s['achieved_gbs']:>14.3f} {s['frac_of_bound']:>14.3f}"
+            )
+        ratio = r["kernels"].get("kernel_vs_jax_ratio")
+        if ratio is not None:
+            print(f"kernel/pure-JAX pipeline ratio: {ratio:.2f}x")
+
+
 def main(directory: str = "reports") -> None:
+    wire_roofline(directory)
     reps = load_reports(directory)
     if not reps:
         print("no dry-run reports found — run: python -m repro.launch.dryrun --all --out reports/")

@@ -63,7 +63,6 @@ from .quantizer import (
     codes_to_counts,
     packed_binarize_batch,
     packed_counts,
-    packed_residuals,
     packed_sign_batch,
     packed_weighted_counts,
     padded_dim,
@@ -370,10 +369,32 @@ class ClientCompressor:
 
             k = max(int(d * self.topk_frac), 1)
             keys = jax.random.split(key, m)
-            idx, codes = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
-                keys, eff, b_vec, k
-            )
+            codes = None
+            if self.use_kernels:
+                from ..kernels import ops as kops
+
+                # Same key/uniform schedule and top-k gather as
+                # topk_binarize; the gathered values binarize + pack
+                # through the kernel engine, so the sparse wire is
+                # bit-identical to the pure path's vmap(pack_bits)(codes)
+                # while the int8 code tensor never materializes.
+                def one(ck, row):
+                    _, idx = jax.lax.top_k(jnp.abs(row), k)
+                    d_sel = jnp.take(row, idx)
+                    b_sel = jnp.take(b_vec, idx)
+                    u = jax.random.uniform(ck, (k,), dtype=jnp.float32)
+                    pk = kops.quant_pack_u(d_sel, b_sel, u)
+                    return idx.astype(jnp.int32), pk[: (k + 7) // 8]
+
+                idx, packed_k = jax.vmap(one)(keys, eff)
+            else:
+                idx, codes = jax.vmap(topk_binarize, in_axes=(0, 0, None, None))(
+                    keys, eff, b_vec, k
+                )
+                packed_k = jax.vmap(pack_bits)(codes)
             if use_ef:
+                if codes is None:
+                    codes = _unpack_rows(packed_k, k)
                 rows = jnp.arange(m)[:, None]
                 sent = jnp.zeros_like(eff).at[rows, idx].set(
                     codes.astype(jnp.float32)
@@ -382,7 +403,7 @@ class ClientCompressor:
                 residuals = eff - sent * b_vec
             wire = SparseWire(
                 indices=idx,
-                packed=jax.vmap(pack_bits)(codes),
+                packed=packed_k,
                 b=b_vec,
                 d=d,
                 k=k,
@@ -392,14 +413,12 @@ class ClientCompressor:
         if self.use_kernels:
             from ..kernels import ops as kops
 
-            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
-                row_offset + jnp.arange(m)
-            )
-            packed = jax.vmap(lambda ck, row: kops.stoch_quant_pack(ck, row, b_vec))(
-                keys, eff
+            packed, res = kops.stoch_quant_compress_batch(
+                key, eff, b_vec, row_offset=row_offset, chunk=self.chunk,
+                want_residual=use_ef,
             )
             if use_ef:
-                residuals = packed_residuals(packed, eff, b_vec, chunk=self.chunk)
+                residuals = res
             return PackedWire(packed=packed, b=b_vec, d=d), residuals
 
         packed, res = packed_binarize_batch(
@@ -745,9 +764,7 @@ def build_pipeline(
 def _build_probit_plus(
     *, dp, b_mode, error_feedback, topk_frac, agg_step, gm_iters, use_kernels, chunk
 ):
-    # The Pallas kernels handle the dense packed wire only; top-k keeps the
-    # pure-JAX sparse path (prox-SGD training kernels are unaffected).
-    kernel_wire = use_kernels and topk_frac >= 1.0
+    kernel_wire = use_kernels
     return AggregatorPipeline(
         name="probit_plus",
         compressor=ClientCompressor(

@@ -28,6 +28,7 @@ __all__ = [
     "byte_popcount",
     "PACK_CHUNK",
     "padded_dim",
+    "client_uniforms",
     "packed_binarize_batch",
     "packed_sign_batch",
     "packed_counts",
@@ -110,6 +111,27 @@ PACK_CHUNK = 8192  # coordinates per chunked-reduction step (multiple of 8)
 def padded_dim(d: int, chunk: int = PACK_CHUNK) -> int:
     """Wire dimension: ``d`` rounded up to a whole number of chunks."""
     return ((d + chunk - 1) // chunk) * chunk
+
+
+def client_uniforms(
+    client_key: jax.Array, n: int, chunk: int = PACK_CHUNK
+) -> jax.Array:
+    """The (n,) quantizer uniforms of one client, counter-derived per chunk.
+
+    Chunk ``j`` draws ``uniform(fold_in(client_key, j), (chunk,))`` — exactly
+    the schedule :func:`packed_binarize_batch` uses internally, so any
+    compressor (dense, chunked, Pallas kernel) that consumes these uniforms
+    with the same ``client_key = fold_in(key, row_offset + m)`` produces a
+    bit-identical wire. Materializes the chunks at once (O(padded n)), which
+    is fine per-client; the chunked batch path never calls this.
+    """
+    n_chunks = padded_dim(n, chunk) // chunk
+    u = jax.vmap(
+        lambda j: jax.random.uniform(
+            jax.random.fold_in(client_key, j), (chunk,), dtype=jnp.float32
+        )
+    )(jnp.arange(n_chunks))
+    return u.reshape(-1)[:n]
 
 
 def _pack_bool_lastdim(bits: jax.Array) -> jax.Array:

@@ -1,11 +1,35 @@
-"""Pallas TPU kernels for PRoBit+'s compute hot spots.
+"""Pallas TPU kernels for PRoBit+'s compute hot spots, with engine dispatch.
 
 Kernels (each: <name>.py kernel, ops.py jit wrapper, ref.py jnp oracle):
-  * stoch_quant   -- fused Eq.-5 stochastic binarize + 8:1 bit pack
-  * bit_aggregate -- unpack + vote count + Eq.-13 ML estimate
+  * stoch_quant   -- fused EF-add + Eq.-5 stochastic binarize + 8:1 bit pack
+  * bit_aggregate -- popcount vote count + Eq.-13 ML estimate
   * prox_sgd      -- fused prox-regularized SGD+momentum local update
+
+Dispatch policy (``ops.resolve_engine``): compiled Pallas on TPU, the
+bit-identical pure-JAX reference wire (``ref.py``) on every other backend;
+interpret-mode Pallas is test-only and never auto-selected.
 """
 
-from .ops import stoch_quant_pack, bit_aggregate, prox_sgd, padded_len
+from .ops import (
+    ENGINES,
+    resolve_engine,
+    stoch_quant_pack,
+    stoch_quant_compress,
+    stoch_quant_compress_batch,
+    quant_pack_u,
+    bit_aggregate,
+    prox_sgd,
+    padded_len,
+)
 
-__all__ = ["stoch_quant_pack", "bit_aggregate", "prox_sgd", "padded_len"]
+__all__ = [
+    "ENGINES",
+    "resolve_engine",
+    "stoch_quant_pack",
+    "stoch_quant_compress",
+    "stoch_quant_compress_batch",
+    "quant_pack_u",
+    "bit_aggregate",
+    "prox_sgd",
+    "padded_len",
+]

@@ -1,16 +1,32 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the Pallas kernels, with engine dispatch.
 
 These accept flat (N,) vectors of arbitrary length, handle padding to the
-(rows, 1024) tile layout, and dispatch to the kernels. ``interpret`` is
-auto-selected: True on CPU (the container's validation mode), False on TPU
-(the deployment target).
+(rows, 1024) tile layout, and dispatch to one of three engines:
 
-``stoch_quant_pack`` / ``bit_aggregate`` are the ``use_kernels=True``
-engine of the "probit_plus" :class:`repro.core.AggregatorPipeline`: they
-produce and consume the same packed uint8 wire as the pure-JAX chunked
-path (``repro.core.quantizer.packed_binarize_batch`` / ``packed_counts``),
-so the two are interchangeable per wire (validated in
-``tests/test_pipeline.py``).
+  * ``"pallas"``    — the compiled Mosaic kernels. Requires a backend with
+    a Pallas compiler (TPU); this is the deployment target.
+  * ``"ref"``       — the pure-JAX reference wire (:mod:`repro.kernels.ref`
+    + the :mod:`repro.core.quantizer` primitives), bit-identical to the
+    kernels and compiled by stock XLA on any backend.
+  * ``"interpret"`` — interpret-mode Pallas: the kernel emulated
+    lane-by-lane in Python/XLA. Orders of magnitude slower than either of
+    the above; it exists *only* so kernel-correctness tests can validate
+    the Pallas lowering on CPU, and is never auto-selected.
+
+:func:`resolve_engine` implements the policy: an explicit ``engine=`` wins;
+otherwise TPU resolves to ``"pallas"`` and every other backend to
+``"ref"``. (A previous revision auto-selected interpret mode on CPU, which
+put the emulator in the hot path and made ``use_kernels=True`` ~115x
+slower than the pure-JAX wire — see ``benchmarks/kernels_micro.py``, whose
+smoke mode now guards this exact regression.)
+
+Randomness: the quantizer uniforms are counter-derived per client via
+:func:`repro.core.quantizer.client_uniforms` (chunk ``j`` of the client
+draws from ``fold_in(client_key, j)``), the same schedule as
+``packed_binarize_batch``. All three engines therefore produce
+bit-identical packed wires — dense, chunked-streaming, and kernel paths
+are interchangeable per wire, validated exactly in
+``tests/test_pipeline.py``.
 """
 
 from __future__ import annotations
@@ -20,16 +36,53 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .stoch_quant import LANES, stoch_quant_pack_2d
+from ..core.quantizer import (
+    PACK_CHUNK,
+    client_uniforms,
+    packed_binarize_batch,
+    packed_counts,
+)
+from .stoch_quant import LANES, stoch_quant_ef_2d, stoch_quant_pack_2d
 from .bit_aggregate import bit_aggregate_2d
 from .prox_sgd import prox_sgd_2d
 from . import ref
 
-__all__ = ["stoch_quant_pack", "bit_aggregate", "prox_sgd", "padded_len"]
+__all__ = [
+    "ENGINES",
+    "resolve_engine",
+    "stoch_quant_pack",
+    "stoch_quant_compress",
+    "stoch_quant_compress_batch",
+    "quant_pack_u",
+    "bit_aggregate",
+    "prox_sgd",
+    "padded_len",
+]
+
+ENGINES = ("pallas", "ref", "interpret")
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() == "cpu"
+def resolve_engine(engine: str | None = None, backend: str | None = None) -> str:
+    """Dispatch policy: explicit ``engine`` wins; else TPU->pallas, *->ref.
+
+    ``interpret`` is only ever returned when explicitly requested — it is a
+    test harness for the kernel lowering, not an execution engine.
+    """
+    if engine is not None:
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        return engine
+    backend = backend or jax.default_backend()
+    return "pallas" if backend == "tpu" else "ref"
+
+
+def _engine_arg(engine: str | None, interpret: bool | None) -> str:
+    """Back-compat shim: ``interpret=True`` means engine="interpret"."""
+    if interpret is not None:
+        if engine is not None:
+            raise ValueError("pass either engine= or interpret=, not both")
+        engine = "interpret" if interpret else "pallas"
+    return resolve_engine(engine)
 
 
 def padded_len(n: int) -> int:
@@ -43,34 +96,206 @@ def _pad_to_rows(x: jax.Array, fill: float) -> jax.Array:
     return x.reshape(-1, LANES)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def stoch_quant_pack(
-    key: jax.Array, delta: jax.Array, b: jax.Array, *, interpret: bool | None = None
-) -> jax.Array:
-    """Flat (N,) delta/b -> packed (ceil(N/1024)*128,) uint8 codes."""
-    if interpret is None:
-        interpret = _interpret_default()
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "want_residual", "engine", "interpret")
+)
+def stoch_quant_compress(
+    key: jax.Array,
+    delta: jax.Array,
+    b: jax.Array,
+    residual: jax.Array | None = None,
+    *,
+    chunk: int = PACK_CHUNK,
+    want_residual: bool = False,
+    engine: str | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Fused EF-add + Eq.-5 binarize + bit-pack for one client.
+
+    ``key`` is the *client* key (already ``fold_in(round_key, row)``-ed by
+    the caller); uniforms follow the counter-derived ``client_uniforms``
+    schedule at ``chunk``, so the emitted wire prefix is bit-identical to
+    ``packed_binarize_batch(..., chunk=chunk)``'s for the same client.
+
+    Args:
+      delta: (N,) f32 model difference.
+      b: scalar or (N,) public range.
+      residual: optional (N,) EF carry added to delta before quantizing.
+      want_residual: also return the next carry ``eff - c * b``.
+    Returns:
+      (packed (padded_len(N)/8,) uint8, residual (N,) f32 or None). Pad
+      coordinates beyond N get delta=-1, b=1 (deterministic 0 bits), the
+      same convention as the pure wire's ``_pad_batch``.
+    """
+    engine = _engine_arg(engine, interpret)
     n = delta.shape[0]
-    d2 = _pad_to_rows(delta, 0.0)
-    b2 = _pad_to_rows(jnp.broadcast_to(b, delta.shape), 0.0)
-    u2 = jax.random.uniform(key, d2.shape, dtype=jnp.float32)
-    packed = stoch_quant_pack_2d(d2, b2, u2, interpret=interpret)
+    b_full = jnp.broadcast_to(b, (n,)).astype(jnp.float32)
+    u = client_uniforms(key, n, chunk)
+    if engine == "ref":
+        pad = padded_len(n) - n
+        d_p = jnp.pad(delta.astype(jnp.float32), (0, pad), constant_values=-1.0)
+        b_p = jnp.pad(b_full, (0, pad), constant_values=1.0)
+        u_p = jnp.pad(u, (0, pad), constant_values=1.0)
+        r_p = None
+        if residual is not None:
+            r_p = jnp.pad(residual.astype(jnp.float32), (0, pad))
+        packed, res = ref.stoch_quant_compress_ref(
+            d_p, b_p, u_p, r_p, want_residual=want_residual
+        )
+        return packed, None if res is None else res[:n]
+    itp = engine == "interpret"
+    d2 = _pad_to_rows(delta, -1.0)
+    b2 = _pad_to_rows(b_full, 1.0)
+    u2 = _pad_to_rows(u, 1.0)
+    if residual is None and not want_residual:
+        packed = stoch_quant_pack_2d(d2, b2, u2, interpret=itp)
+        return packed.reshape(-1), None
+    r2 = (
+        _pad_to_rows(residual, 0.0)
+        if residual is not None
+        else jnp.zeros_like(d2)
+    )
+    packed, res = stoch_quant_ef_2d(d2, r2, b2, u2, interpret=itp)
+    if not want_residual:
+        return packed.reshape(-1), None
+    return packed.reshape(-1), res.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "engine", "interpret"))
+def stoch_quant_pack(
+    key: jax.Array,
+    delta: jax.Array,
+    b: jax.Array,
+    *,
+    chunk: int = PACK_CHUNK,
+    engine: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flat (N,) delta/b -> packed (padded_len(N)/8,) uint8 codes."""
+    packed, _ = stoch_quant_compress(
+        key, delta, b, chunk=chunk, engine=_engine_arg(engine, interpret)
+    )
+    return packed
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "want_residual", "engine", "interpret")
+)
+def stoch_quant_compress_batch(
+    key: jax.Array,
+    deltas: jax.Array,
+    b: jax.Array,
+    *,
+    row_offset: jax.Array | int = 0,
+    chunk: int = PACK_CHUNK,
+    want_residual: bool = False,
+    engine: str | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Batch compress of an (M, d) cohort to the kernel-aligned wire.
+
+    Client ``i`` draws from ``fold_in(key, row_offset + i)`` with the
+    ``client_uniforms`` chunk schedule — the ``packed_binarize_batch``
+    convention, so the wire is bit-identical across engines *and* across
+    client-chunked streaming splits (``row_offset`` rebases the cohort
+    position).
+
+    The ref engine *is* ``packed_binarize_batch`` (the chunked pure-JAX
+    packer — cache-blocked, the fast path on CPU), realigned losslessly to
+    the kernel wire width ``padded_len(d)/8`` (both pads are deterministic
+    0 bits); pallas/interpret vmap the fused kernel over clients.
+
+    Returns (packed (M, padded_len(d)/8) uint8, residuals (M, d) or None).
+    """
+    engine = _engine_arg(engine, interpret)
+    m, d = deltas.shape
+    target = padded_len(d) // 8
+    if engine == "ref":
+        packed, res = packed_binarize_batch(
+            key, deltas, b, chunk=chunk, want_residual=want_residual,
+            row_offset=row_offset,
+        )
+        if packed.shape[1] > target:
+            packed = packed[:, :target]
+        elif packed.shape[1] < target:
+            packed = jnp.pad(packed, ((0, 0), (0, target - packed.shape[1])))
+        return packed, res
+    client_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        row_offset + jnp.arange(m)
+    )
+    return jax.vmap(
+        lambda ck, row: stoch_quant_compress(
+            ck, row, b, chunk=chunk, want_residual=want_residual, engine=engine
+        )
+    )(client_keys, deltas)
+
+
+@functools.partial(jax.jit, static_argnames=("engine", "interpret"))
+def quant_pack_u(
+    delta: jax.Array,
+    b: jax.Array,
+    uniforms: jax.Array,
+    *,
+    engine: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Explicit-uniforms Eq.-5 binarize + pack (the top-k gathered values).
+
+    Unlike :func:`stoch_quant_compress` this draws nothing itself — the
+    caller supplies the uniforms (e.g. ``uniform(client_key, (k,))``, the
+    sparse path's schedule). (K,) float arrays -> (padded_len(K)/8,) uint8;
+    pad coordinates get deterministic 0 bits, so slicing the first
+    ``ceil(K/8)`` bytes reproduces ``pack_bits``'s output exactly.
+    """
+    engine = _engine_arg(engine, interpret)
+    k = delta.shape[0]
+    pad = padded_len(k) - k
+    d_p = jnp.pad(delta.astype(jnp.float32), (0, pad), constant_values=-1.0)
+    b_p = jnp.pad(
+        jnp.broadcast_to(b, (k,)).astype(jnp.float32), (0, pad),
+        constant_values=1.0,
+    )
+    u_p = jnp.pad(uniforms, (0, pad), constant_values=1.0)
+    if engine == "ref":
+        packed, _ = ref.stoch_quant_compress_ref(d_p, b_p, u_p)
+        return packed
+    packed = stoch_quant_pack_2d(
+        d_p.reshape(-1, LANES),
+        b_p.reshape(-1, LANES),
+        u_p.reshape(-1, LANES),
+        interpret=engine == "interpret",
+    )
     return packed.reshape(-1)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n", "engine", "interpret"))
 def bit_aggregate(
-    packed: jax.Array, b: jax.Array, n: int, *, interpret: bool | None = None
+    packed: jax.Array,
+    b: jax.Array,
+    n: int,
+    *,
+    engine: str | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """packed (M, P) uint8 (P = padded_len(n)/8), b (n,) -> theta_hat (n,)."""
-    if interpret is None:
-        interpret = _interpret_default()
-    b2 = _pad_to_rows(jnp.broadcast_to(b, (n,)), 0.0)
-    theta2 = bit_aggregate_2d(packed, b2, interpret=interpret)
+    """packed (M, P) uint8 (P = padded_len(n)/8), b (n,) -> theta_hat (n,).
+
+    The vote count is popcount-based on every engine
+    (``jax.lax.population_count`` after an octet bit-transpose) and
+    bit-exact with ``repro.core.quantizer.packed_counts``; pad columns are
+    sliced away before the estimate so tail lanes can never leak.
+    """
+    engine = _engine_arg(engine, interpret)
+    m = packed.shape[0]
+    b_full = jnp.broadcast_to(b, (n,)).astype(jnp.float32)
+    if engine == "ref":
+        counts = packed_counts(packed)[:n]
+        return (2.0 * counts.astype(jnp.float32) - m) / m * b_full
+    b2 = _pad_to_rows(b_full, 0.0)
+    theta2 = bit_aggregate_2d(packed, b2, interpret=engine == "interpret")
     return theta2.reshape(-1)[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("engine", "interpret"))
 def prox_sgd(
     w: jax.Array,
     w0: jax.Array,
@@ -80,16 +305,18 @@ def prox_sgd(
     lam: jax.Array,
     mu: jax.Array,
     *,
+    engine: str | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Flat (N,) fused prox-SGD step; returns (w_new, momentum_new)."""
-    if interpret is None:
-        interpret = _interpret_default()
+    engine = _engine_arg(engine, interpret)
+    if engine == "ref":
+        return ref.prox_sgd_ref(w, w0, grad, momentum, eta, lam, mu)
     n = w.shape[0]
     args = [_pad_to_rows(x, 0.0) for x in (w, w0, grad, momentum)]
     elm = jnp.stack(
         [jnp.asarray(eta, jnp.float32), jnp.asarray(lam, jnp.float32),
          jnp.asarray(mu, jnp.float32)]
     )
-    w2, m2 = prox_sgd_2d(*args, elm, interpret=interpret)
+    w2, m2 = prox_sgd_2d(*args, elm, interpret=engine == "interpret")
     return w2.reshape(-1)[:n], m2.reshape(-1)[:n]

@@ -1,7 +1,20 @@
-"""Pure-jnp oracles for every Pallas kernel in this package.
+"""Pure-JAX reference wire: oracles for every Pallas kernel in this package.
 
-These are the single source of truth for kernel semantics; tests sweep
-shapes/dtypes and ``assert_allclose`` the Pallas outputs against these.
+Two jobs, one implementation:
+
+1. **Semantics oracle.** Tests sweep shapes/dtypes and assert the Pallas
+   outputs (run in ``interpret`` mode on CPU) match these bit-for-bit.
+2. **Dispatch target.** On any backend without a Mosaic compiler (CPU,
+   GPU today), :mod:`repro.kernels.ops` routes ``use_kernels=True`` here
+   instead of at interpret-mode Pallas — interpret mode emulates the
+   kernel lane-by-lane and is orders of magnitude slower than compiled
+   XLA, so it is reserved for explicit kernel-correctness tests.
+
+To guarantee the oracle can never drift from the production pure-JAX wire,
+these functions are thin compositions of the :mod:`repro.core.quantizer`
+primitives (``binarize_prob``, ``_pack_bool_lastdim``, ``byte_popcount``)
+rather than re-implementations. Imports are deferred to call time to keep
+``repro.kernels`` importable without ``repro.core`` (and vice versa).
 """
 
 from __future__ import annotations
@@ -10,25 +23,46 @@ import jax
 import jax.numpy as jnp
 
 
-def stoch_quant_pack_ref(
-    delta: jax.Array, b: jax.Array, uniforms: jax.Array
-) -> jax.Array:
-    """Fused Eq.-5 binarize + LSB-first 8:1 bit pack.
+def stoch_quant_compress_ref(
+    delta: jax.Array,
+    b: jax.Array,
+    uniforms: jax.Array,
+    residual: jax.Array | None = None,
+    *,
+    want_residual: bool = False,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Fused EF-add + Eq.-5 binarize + LSB-first 8:1 bit pack.
 
     Args:
       delta: (N,) float — model difference (N divisible by 8).
       b: (N,) float — public quantization range (>= 0).
       uniforms: (N,) float32 in [0, 1).
+      residual: optional (N,) float error-feedback carry, added to delta
+        before binarization (eff = delta + residual).
+      want_residual: also return the next EF carry ``eff - c * b``.
     Returns:
-      (N // 8,) uint8 packed codes; bit=1 encodes c=+1.
+      ((N // 8,) uint8 packed codes, (N,) f32 residual or None);
+      bit=1 encodes c=+1.
     """
-    b = b.astype(jnp.float32)
-    d = jnp.clip(delta.astype(jnp.float32), -b, b)
-    safe_b = jnp.where(b > 0, b, 1.0)
-    p = jnp.where(b > 0, 0.5 + 0.5 * d / safe_b, 0.5)
-    bits = (uniforms < p).astype(jnp.uint8).reshape(-1, 8)
-    shifts = jnp.arange(8, dtype=jnp.uint8)
-    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+    from ..core.quantizer import _pack_bool_lastdim, binarize_prob
+
+    eff = delta.astype(jnp.float32)
+    if residual is not None:
+        eff = eff + residual.astype(jnp.float32)
+    b = jnp.broadcast_to(b, eff.shape).astype(jnp.float32)
+    bits = uniforms < binarize_prob(eff, b)
+    packed = _pack_bool_lastdim(bits)
+    if not want_residual:
+        return packed, None
+    return packed, eff - jnp.where(bits, b, -b)
+
+
+def stoch_quant_pack_ref(
+    delta: jax.Array, b: jax.Array, uniforms: jax.Array
+) -> jax.Array:
+    """Eq.-5 binarize + pack without error feedback (kept for kernel tests)."""
+    packed, _ = stoch_quant_compress_ref(delta, b, uniforms)
+    return packed
 
 
 def bit_aggregate_ref(packed: jax.Array, b: jax.Array) -> jax.Array:
@@ -38,9 +72,9 @@ def bit_aggregate_ref(packed: jax.Array, b: jax.Array) -> jax.Array:
     ``population_count`` (which sums a byte's 8 bits, i.e. across 8
     coordinates) applies after an octet bit-transpose: 8 clients' bit-k's
     re-pack into one client-major byte whose popcount counts 8 votes at
-    once (uint8 LUT fallback via
-    :func:`repro.core.quantizer.byte_popcount`). Integer counts are
-    identical to the unpack-and-sum reduction.
+    once. Delegates to :func:`repro.core.quantizer.packed_counts`, the
+    d-chunked production reduction, so ref and pure-JAX counts are the
+    same code path by construction.
 
     Args:
       packed: (M, N // 8) uint8.
@@ -48,16 +82,11 @@ def bit_aggregate_ref(packed: jax.Array, b: jax.Array) -> jax.Array:
     Returns:
       (N,) float32 — theta_hat = (2 N_i - M) / M * b_i.
     """
-    from ..core.quantizer import byte_popcount
+    from ..core.quantizer import packed_counts
 
-    m, pbytes = packed.shape
-    pad = (-m) % 8
-    x = jnp.pad(packed, ((0, pad), (0, 0))).reshape(-1, 8, pbytes)
-    shifts = jnp.arange(8, dtype=jnp.uint8)
-    bit_k = (x[:, :, :, None] >> shifts) & jnp.uint8(1)  # (G, 8, N//8, 8)
-    octet = jnp.sum(bit_k << shifts[None, :, None, None], axis=1, dtype=jnp.uint8)
-    counts = jnp.sum(byte_popcount(octet).astype(jnp.int32), axis=0).reshape(-1)
-    return (2.0 * counts - m) / m * b.astype(jnp.float32)
+    m = packed.shape[0]
+    counts = packed_counts(packed)[: b.shape[0]]
+    return (2.0 * counts.astype(jnp.float32) - m) / m * b.astype(jnp.float32)
 
 
 def prox_sgd_ref(

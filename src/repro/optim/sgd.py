@@ -3,8 +3,10 @@
 Clients minimize ``h_m(w; w_g) = f_m(w) + (lam/2) ||w - w_g||^2`` with
 momentum SGD (paper: momentum 0.5, lr 0.01, 5 local epochs, batch 10).
 ``local_prox_train`` works on *flat* parameter vectors so the result feeds
-straight into the PRoBit+ quantizer; the fused Pallas ``prox_sgd`` kernel
-is used when requested (interpret mode on CPU).
+straight into the PRoBit+ quantizer; ``use_kernel=True`` routes the step
+through ``repro.kernels.prox_sgd``, whose dispatch policy picks the fused
+Pallas kernel on TPU and the arithmetically identical pure-JAX reference
+elsewhere (interpret-mode Pallas is test-only).
 """
 
 from __future__ import annotations

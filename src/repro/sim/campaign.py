@@ -55,6 +55,7 @@ import numpy as np
 from ..core import is_timing_attack, is_wire_attack
 from ..fl import FLConfig
 from ..fl import rounds as R
+from ..kernels import resolve_engine
 from .metrics import CampaignResult, CellResult
 from .plan import (
     CampaignPlan,
@@ -544,6 +545,16 @@ def run_campaign(
             "n_elems": L["n"],
             "n_elems_padded": L["n_padded"],
             "cells_per_sec": L["n"] / wall if wall > 0 else float("inf"),
+            # Which engine actually served the packed wire: the dispatch
+            # policy (kernels.ops.resolve_engine) picks the winner per
+            # backend, so use_kernels=True never lands on interpret-mode
+            # Pallas off-TPU (the regression this field makes auditable).
+            "backend": jax.default_backend(),
+            "kernel_engine": (
+                resolve_engine()
+                if cfgs[group.cell_idx[0]].use_kernels
+                else "jax"
+            ),
         }
         group_stats.append(stats)
         if verbose:

@@ -155,10 +155,14 @@ class CampaignPlan:
 
     def describe(self) -> str:
         """Human-readable plan summary (one line per group)."""
+        from ..kernels import resolve_engine
+
         lines = [
             f"CampaignPlan: {len(self.spec.cells)} cells x "
             f"{len(self.spec.seeds)} seeds -> {self.n_programs} programs "
-            f"({self.n_fused} fused, shard={self.shard})"
+            f"({self.n_fused} fused, shard={self.shard}, "
+            f"backend={jax.default_backend()}, "
+            f"kernel_engine={resolve_engine()})"
         ]
         for g in self.groups:
             kind = f"fused@M<={g.m_pad}" if g.fused else f"M={g.m_pad}"

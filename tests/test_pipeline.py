@@ -133,31 +133,54 @@ def test_topk_pipeline_matches_sparse_reference(deltas, zeros_res):
     np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_ref), rtol=1e-6)
 
 
-def test_kernel_pipeline_matches_dense_within_quantizer_tolerance(
-    deltas, zeros_res
-):
-    """Pallas interpret-mode wire: independent draws, same distribution.
-
-    Each coordinate of theta_hat has std <= b/sqrt(M); both paths must land
-    within 6 sigma of the true mean and of each other (union bound over
-    D coords keeps the false-positive probability negligible)."""
-    mean_delta = jnp.mean(deltas, axis=0)
-    sigma = float(B) / np.sqrt(M)
-    pk = build_pipeline("probit_plus", use_kernels=True)
-    pj = build_pipeline("probit_plus", chunk=CHUNK)
+@pytest.mark.parametrize("chunk", [CHUNK, 8192])
+@pytest.mark.parametrize("error_feedback", [False, True])
+def test_kernel_pipeline_matches_pure_exactly(deltas, chunk, error_feedback):
+    """use_kernels=True is bit-exact with the pure-JAX packed path: the
+    engines share the counter-derived uniform schedule, the popcount count
+    reduction, and the Eq.-13 float expression — distributional tolerance
+    is no longer needed (or accepted). EF residuals match exactly too."""
+    res0 = (
+        1e-3 * jax.random.normal(jax.random.fold_in(KEY, 3), (M, D))
+        if error_feedback
+        else jnp.zeros((M, D), jnp.float32)
+    )
+    pk = build_pipeline(
+        "probit_plus", use_kernels=True, chunk=chunk,
+        error_feedback=error_feedback,
+    )
+    pj = build_pipeline(
+        "probit_plus", chunk=chunk, error_feedback=error_feedback
+    )
     assert pk.compressor.use_kernels and pk.server.use_kernels
-    theta_k, _ = pk(KEY, deltas, B, zeros_res)
-    theta_j, _ = pj(KEY, deltas, B, zeros_res)
-    assert float(jnp.max(jnp.abs(theta_k - mean_delta))) < 6 * sigma
-    assert float(jnp.max(jnp.abs(theta_j - mean_delta))) < 6 * sigma
-    assert float(jnp.max(jnp.abs(theta_k - theta_j))) < 12 * sigma
+    theta_k, res_k = pk(KEY, deltas, B, res0)
+    theta_j, res_j = pj(KEY, deltas, B, res0)
+    np.testing.assert_array_equal(np.asarray(theta_k), np.asarray(theta_j))
+    np.testing.assert_array_equal(np.asarray(res_k), np.asarray(res_j))
+
+
+def test_kernel_wire_is_bit_exact_with_pure_wire(deltas, zeros_res):
+    """The packed bytes themselves agree on the common prefix; the wider
+    wire's extra pad bytes are deterministically zero (so either server
+    realigns losslessly)."""
+    pj = build_pipeline("probit_plus", chunk=CHUNK)
+    pk = build_pipeline("probit_plus", use_kernels=True, chunk=CHUNK)
+    wire_j, _ = pj.compressor.compress(KEY, deltas, B, zeros_res)
+    wire_k, _ = pk.compressor.compress(KEY, deltas, B, zeros_res)
+    prefix = min(wire_j.packed.shape[1], wire_k.packed.shape[1])
+    np.testing.assert_array_equal(
+        np.asarray(wire_j.packed[:, :prefix]),
+        np.asarray(wire_k.packed[:, :prefix]),
+    )
+    assert not np.any(np.asarray(wire_j.packed[:, prefix:]))
+    assert not np.any(np.asarray(wire_k.packed[:, prefix:]))
 
 
 @pytest.mark.parametrize("jax_chunk", [1024, 8192])  # 8192 = default, pads
 def test_kernel_and_jax_wires_are_interchangeable(deltas, zeros_res, jax_chunk):
     """One canonical wire: the kernel server must decode the pure-JAX wire
-    and vice versa, coordinate for coordinate — including when the two
-    paths' pad widths differ (default chunk 8192 vs 1024-lane kernel)."""
+    and vice versa, bit for bit — including when the two paths' pad widths
+    differ (default chunk 8192 vs 1024-lane kernel)."""
     pj = build_pipeline("probit_plus", chunk=jax_chunk)
     pk = build_pipeline("probit_plus", use_kernels=True)
     wire_j, _ = pj.compressor.compress(KEY, deltas, B, zeros_res)
@@ -165,11 +188,42 @@ def test_kernel_and_jax_wires_are_interchangeable(deltas, zeros_res, jax_chunk):
     # kernel server on the pure-JAX wire
     theta_a = pk.server.aggregate(wire_j)
     theta_b = pj.server.aggregate(wire_j)
-    np.testing.assert_allclose(np.asarray(theta_a), np.asarray(theta_b), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(theta_a), np.asarray(theta_b))
     # pure-JAX server on the kernel wire
     theta_c = pj.server.aggregate(wire_k)
     theta_d = pk.server.aggregate(wire_k)
-    np.testing.assert_allclose(np.asarray(theta_c), np.asarray(theta_d), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(theta_c), np.asarray(theta_d))
+
+
+@pytest.mark.parametrize("error_feedback", [False, True])
+def test_topk_kernel_path_matches_pure_exactly(deltas, error_feedback):
+    """The newly unlocked topk_frac < 1 kernel path: same key schedule and
+    top-k gather, binarize+pack through the kernel engine — indices,
+    packed codes, EF residuals, and the sparse estimate all bit-exact with
+    the pure path (no silent fallback: the compressor keeps use_kernels)."""
+    frac = 0.25
+    res0 = (
+        1e-3 * jax.random.normal(jax.random.fold_in(KEY, 5), (M, D))
+        if error_feedback
+        else jnp.zeros((M, D), jnp.float32)
+    )
+    pk = build_pipeline(
+        "probit_plus", topk_frac=frac, use_kernels=True,
+        error_feedback=error_feedback,
+    )
+    pj = build_pipeline(
+        "probit_plus", topk_frac=frac, error_feedback=error_feedback
+    )
+    assert pk.compressor.use_kernels  # the old builder silently dropped it
+    wire_k, res_k = pk.compressor.compress(KEY, deltas, B, res0)
+    wire_j, res_j = pj.compressor.compress(KEY, deltas, B, res0)
+    assert isinstance(wire_k, SparseWire)
+    np.testing.assert_array_equal(np.asarray(wire_k.indices), np.asarray(wire_j.indices))
+    np.testing.assert_array_equal(np.asarray(wire_k.packed), np.asarray(wire_j.packed))
+    np.testing.assert_array_equal(np.asarray(res_k), np.asarray(res_j))
+    theta_k = pk.server.aggregate(wire_k)
+    theta_j = pj.server.aggregate(wire_j)
+    np.testing.assert_array_equal(np.asarray(theta_k), np.asarray(theta_j))
 
 
 def test_baseline_pipelines_match_legacy_formulas(deltas, zeros_res):
@@ -190,9 +244,14 @@ def test_baseline_pipelines_match_legacy_formulas(deltas, zeros_res):
 
 
 def test_simulation_kernel_path_matches_dense_reference():
-    """FLSimulation(use_kernels=True) runs the packed Pallas wire and its
-    per-round global update stays within stochastic-quantizer tolerance of
-    the dense reference on a fixed seed."""
+    """FLSimulation(use_kernels=True) vs use_kernels=False on a fixed seed.
+
+    On any non-TPU backend the dispatch policy resolves the kernel wire to
+    the pure-JAX ref engine, which shares the uniform schedule, count
+    reduction, and local-solver arithmetic with the pure path — so the two
+    runs are *bit-identical*. On TPU (compiled Pallas) the quantizer draws
+    agree but fused-fma ordering may differ at ulp level; fall back to the
+    stochastic tolerance there."""
     from repro.data import make_classification, partition_label_skew
     from repro.fl import FLConfig, FLSimulation
     from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
@@ -222,11 +281,13 @@ def test_simulation_kernel_path_matches_dense_reference():
 
     w_dense = sims[False].w_global
     w_kernel = sims[True].w_global
-    d = w_dense.shape[0]
-    # theta_hat coordinates differ by independent quantizer draws with std
-    # <= b/sqrt(M) each; allow 6x the resulting rms over d coordinates
-    # (the prox-SGD kernel's fused fma ordering adds only ~ulp-level noise).
-    b = float(sims[False].history[-1]["b"]) if sims[False].history else 0.01
-    tol = 6.0 * b * np.sqrt(2.0 * d / m)
-    diff = float(jnp.linalg.norm(w_dense - w_kernel))
-    assert diff < tol, (diff, tol)
+    from repro.kernels import resolve_engine
+
+    if resolve_engine() == "ref":
+        np.testing.assert_array_equal(np.asarray(w_dense), np.asarray(w_kernel))
+    else:
+        d = w_dense.shape[0]
+        b = float(sims[False].history[-1]["b"]) if sims[False].history else 0.01
+        tol = 6.0 * b * np.sqrt(2.0 * d / m)
+        diff = float(jnp.linalg.norm(w_dense - w_kernel))
+        assert diff < tol, (diff, tol)

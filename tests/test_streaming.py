@@ -215,6 +215,35 @@ def test_round_parity_masks_state_attacks(round_env, extra):
         )
 
 
+def test_round_parity_kernel_wire(round_env):
+    """use_kernels=True under client_chunk streaming: the kernel wire's
+    counter-derived per-client PRNG (``row_offset`` rebasing) makes the
+    chunked round bit-exact with the dense one — and, because the dispatch
+    policy resolves to the ref engine off-TPU, bit-exact with the pure-JAX
+    wire too."""
+    from repro.kernels import resolve_engine
+
+    base = dict(
+        n_clients=N, rounds=2, local_epochs=1, aggregator="probit_plus",
+        use_kernels=True,
+    )
+    dense, _ = _run(round_env, FLConfig(**base))
+    stream, _ = _run(round_env, FLConfig(**base, client_chunk=4))
+    for field in ("w_global", "w_locals", "residuals"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(dense, field)), np.asarray(getattr(stream, field))
+        )
+    if resolve_engine() == "ref":
+        pure, _ = _run(
+            round_env,
+            FLConfig(n_clients=N, rounds=2, local_epochs=1,
+                     aggregator="probit_plus"),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dense.w_global), np.asarray(pure.w_global)
+        )
+
+
 def test_gaussian_attack_chunk_invariant(round_env):
     """The gaussian payload draws per cohort row, so the stream round is
     chunk-size invariant (dense parity is not required — the dense round
