@@ -283,6 +283,18 @@ class ClientCompressor:
     b_mode: str = "dynamic"
     use_kernels: bool = False
     chunk: int = PACK_CHUNK
+    # Quantizer draw width: 32 = f32 uniforms (canonical), 16 = uint16
+    # draws against a uint32 threshold (half the RNG memory; see
+    # quantizer.threshold_u16). Kernel and top-k wires require 32.
+    rand_bits: int = 32
+
+    def __post_init__(self):
+        if self.rand_bits not in (16, 32):
+            raise ValueError(f"rand_bits must be 16 or 32, got {self.rand_bits}")
+        if self.rand_bits == 16 and self.use_kernels:
+            raise ValueError("rand_bits=16 is not supported on the kernel wire")
+        if self.rand_bits == 16 and self.topk_frac < 1.0:
+            raise ValueError("rand_bits=16 is not supported on the top-k wire")
 
     # The Eq.-5 bit probability — shared with the mesh path (fl_step).
     bit_probability = staticmethod(binarize_prob)
@@ -423,7 +435,7 @@ class ClientCompressor:
 
         packed, res = packed_binarize_batch(
             key, eff, b_vec, chunk=self.chunk, want_residual=use_ef,
-            row_offset=row_offset,
+            row_offset=row_offset, rand_bits=self.rand_bits,
         )
         if use_ef:
             residuals = res
@@ -483,9 +495,13 @@ class ServerAggregator:
     def init_counts(self, p_bytes: int, *, weighted: bool = False) -> jax.Array:
         """Zero vote-count carry for a ``p_bytes``-per-row packed wire.
 
-        int32 for the exact unweighted count; f32 when per-row weights
-        (staleness / active-client masks) fold in. f32 sums of 0/1-weighted
-        bits stay exact below 2**24 contributing clients.
+        Count-dtype policy: int32 for the exact unweighted count (any
+        cohort below 2**31 clients); f32 when per-row weights (staleness /
+        active-client masks) fold in — f32 sums of 0/1-weighted bits stay
+        exact below 2**24 contributing clients. The uint8 dtype of the
+        *wire rows* must never leak into the accumulator: a uint8 count
+        silently wraps mod 256 past 255 clients, exactly the large-M
+        regime the paper's O(1/M) result targets.
         """
         return jnp.zeros((8 * p_bytes,), jnp.float32 if weighted else jnp.int32)
 
@@ -740,6 +756,7 @@ def build_pipeline(
     gm_iters: int = 16,
     use_kernels: bool = False,
     chunk: int = PACK_CHUNK,
+    rand_bits: int = 32,
 ) -> AggregatorPipeline:
     """Resolve a registered aggregator name into a configured pipeline."""
     try:
@@ -757,12 +774,14 @@ def build_pipeline(
         gm_iters=gm_iters,
         use_kernels=use_kernels,
         chunk=chunk,
+        rand_bits=rand_bits,
     )
 
 
 @_register("probit_plus")
 def _build_probit_plus(
-    *, dp, b_mode, error_feedback, topk_frac, agg_step, gm_iters, use_kernels, chunk
+    *, dp, b_mode, error_feedback, topk_frac, agg_step, gm_iters, use_kernels,
+    chunk, rand_bits,
 ):
     kernel_wire = use_kernels
     return AggregatorPipeline(
@@ -775,6 +794,7 @@ def _build_probit_plus(
             b_mode=b_mode,
             use_kernels=kernel_wire,
             chunk=chunk,
+            rand_bits=rand_bits,
         ),
         server=ProBitPlusServer(use_kernels=kernel_wire, chunk=chunk),
     )

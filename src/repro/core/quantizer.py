@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "binarize_prob",
+    "threshold_u16",
     "stochastic_binarize",
     "pack_bits",
     "unpack_bits",
@@ -51,6 +52,21 @@ def binarize_prob(delta: jax.Array, b: jax.Array) -> jax.Array:
     safe_b = jnp.where(b > 0, b, 1.0)
     p = 0.5 + 0.5 * delta / safe_b
     return jnp.where(b > 0, p, 0.5)
+
+
+def threshold_u16(p: jax.Array) -> jax.Array:
+    """Eq.-5 probability -> 16-bit comparison threshold, in uint32.
+
+    The ``rand_bits=16`` wire compares a uint16 draw against
+    ``floor(p * 65536)``: probability granularity 2^-16 (relative bias
+    < 1.6e-5) at half the random-draw memory of f32 uniforms. The
+    comparison domain is uint32 **on purpose**: ``p = 1.0`` (a coordinate
+    with ``|delta| >= b``, i.e. a *certain* +1 vote) maps to 65536, which
+    a uint16 cast would wrap to 0 and transmit as a certain -1 — the
+    fl_step sign-flip bug this function regression-guards. 65536 exceeds
+    every uint16 draw, so saturated votes stay certain.
+    """
+    return (p.astype(jnp.float32) * 65536.0).astype(jnp.uint32)
 
 
 def stochastic_binarize(key: jax.Array, delta: jax.Array, b: jax.Array) -> jax.Array:
@@ -169,6 +185,7 @@ def packed_binarize_batch(
     chunk: int = PACK_CHUNK,
     want_residual: bool = False,
     row_offset: jax.Array | int = 0,
+    rand_bits: int = 32,
 ) -> tuple[jax.Array, jax.Array | None]:
     """Chunked Eq. 5 binarize + pack: (M, d) f32 -> (M, d_pad/8) uint8.
 
@@ -184,7 +201,16 @@ def packed_binarize_batch(
     With ``want_residual`` the error-feedback residual
     ``delta - c * b`` (codes in ±1) is emitted alongside, computed inside
     the same chunk loop.
+
+    ``rand_bits=16`` swaps the f32 uniform for a uint16 draw compared
+    against :func:`threshold_u16` in uint32 (same fold_in schedule, half
+    the random-draw memory, probability granularity 2^-16; saturated
+    ``|delta| >= b`` coordinates remain *certain* votes). The 16-bit wire
+    is a distinct, reproducible bit stream — not bit-identical to the
+    f32 one.
     """
+    if rand_bits not in (16, 32):
+        raise ValueError(f"rand_bits must be 16 or 32, got {rand_bits}")
     m, d = deltas.shape
     deltas_p, b_full, d_pad = _pad_batch(deltas, b, chunk)
     n_chunks = d_pad // chunk
@@ -197,10 +223,15 @@ def packed_binarize_batch(
         bch = jax.lax.dynamic_slice_in_dim(b_full, j * chunk, chunk, axis=0)
 
         def per_client(ck, drow):
-            u = jax.random.uniform(
-                jax.random.fold_in(ck, j), (chunk,), dtype=jnp.float32
-            )
-            bits = u < binarize_prob(drow, bch)
+            kj = jax.random.fold_in(ck, j)
+            if rand_bits == 16:
+                u16 = jax.random.bits(kj, (chunk,), jnp.uint16)
+                bits = u16.astype(jnp.uint32) < threshold_u16(
+                    binarize_prob(drow, bch)
+                )
+            else:
+                u = jax.random.uniform(kj, (chunk,), dtype=jnp.float32)
+                bits = u < binarize_prob(drow, bch)
             packed = _pack_bool_lastdim(bits)
             if want_residual:
                 return packed, drow - jnp.where(bits, bch, -bch)

@@ -19,11 +19,27 @@ from .rounds import (
     make_context,
     run_rounds,
 )
+from .pytree_wire import (
+    PytreeWireState,
+    aggregate_pytree,
+    compress_pytree,
+    init_wire_state,
+    leaf_key,
+    pytree_wire_bytes,
+    stream_aggregate_pytree,
+)
 from .runtime import FLConfig, FLSimulation
 
 __all__ = [
     "FLConfig",
     "FLSimulation",
+    "PytreeWireState",
+    "leaf_key",
+    "init_wire_state",
+    "pytree_wire_bytes",
+    "compress_pytree",
+    "aggregate_pytree",
+    "stream_aggregate_pytree",
     "RoundState",
     "AsyncRoundState",
     "RoundContext",

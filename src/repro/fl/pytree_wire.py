@@ -1,0 +1,267 @@
+"""Packed one-bit wire over a real model parameter pytree (per-layer).
+
+This is the bridge between the flat-vector FL engine (``fl/rounds.py``
+operates on raveled ``(M, d)`` cohorts) and the model zoo: it runs the
+full ``ClientCompressor``/``ServerAggregator`` protocol — EF residual add
+-> top-k -> Eq.-5 stochastic binarize -> uint8 bit-pack -> count
+accumulate -> Eq.-13 ML estimate — **per parameter leaf** over a real
+pytree, so a transformer fine-tunes through exactly the wire the paper
+analyzes.
+
+Wire format (what travels, per layer)
+-------------------------------------
+Each leaf ``l`` (``jax.tree_util.tree_flatten`` order) is flattened to
+``(M, d_l)`` and compressed independently into the canonical
+:class:`~repro.core.aggregation.PackedWire`: an
+``(M, padded_dim(d_l)/8)`` uint8 matrix of LSB-first packed one-bit codes
+plus the public range vector ``b`` — 1 bit per parameter per client on
+the uplink (the top-k variant ships a
+:class:`~repro.core.aggregation.SparseWire` of per-client index sets +
+packed codes instead). Leaves are never concatenated: resident memory is
+O(M * d_l / 8) per layer for the one-shot path and O(C * d_l / 8) for the
+client-streamed path; the dense concatenated code tensor (or even a dense
+concatenated f32 delta) never materializes.
+
+Key schedule (why chunked == dense, per layer and across layers)
+----------------------------------------------------------------
+Leaf ``l`` uses quantizer key ``fold_in(round_key, l)``
+(:func:`leaf_key`); inside a leaf the compressor applies the existing
+counter-derived schedule — client at cohort position ``g`` draws chunk
+``j`` uniforms from ``fold_in(fold_in(leaf_key, g), j)``. Under
+``jax_threefry_partitionable`` the draws depend only on ``(l, g, j)``,
+so any client-chunking (via ``row_offset``), any per-layer processing
+order, and a flatten-per-leaf dense reference all produce bit-identical
+wires — including leaves with ``size % 8 != 0``, whose pad coordinates
+carry deterministic 0 bits that :meth:`ServerAggregator.finalize` slices
+off.
+
+State (where EF / top-k live)
+-----------------------------
+:class:`PytreeWireState` is a per-parameter optimizer-state pytree, like
+an Adam moment: ``residuals`` holds one ``(M, *leaf_shape)`` f32 buffer
+per parameter (the error-feedback carry; zeros and pass-through when EF
+is off). Top-k selection masks are per-round (the ``SparseWire.indices``
+of each leaf), not persistent — only the unsent mass persists, inside
+the same residual buffer.
+
+Count-dtype policy
+------------------
+Vote counts accumulate in **int32** (``ServerAggregator.init_counts``;
+f32 when per-row weights fold in) — exact for any cohort below 2**31
+clients. The uint8 claim applies to the packed *wire rows only*; an
+accumulator in uint8 would silently wrap mod 256 past 255 clients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.aggregation import AggregatorPipeline, Wire
+
+__all__ = [
+    "PytreeWireState",
+    "leaf_key",
+    "init_wire_state",
+    "pytree_wire_bytes",
+    "compress_pytree",
+    "aggregate_pytree",
+    "stream_aggregate_pytree",
+]
+
+
+def leaf_key(key: jax.Array, leaf_index: int) -> jax.Array:
+    """Quantizer key of parameter leaf ``leaf_index`` (tree_flatten order).
+
+    The one extra fold level on top of the flat-vector schedule: every
+    path that compresses leaf ``l`` — one-shot, client-streamed, the mesh
+    step in ``launch/fl_step.py``, or a dense per-leaf reference — derives
+    its per-client keys from this, which is what makes them all emit the
+    same bits.
+    """
+    return jax.random.fold_in(key, leaf_index)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PytreeWireState:
+    """Per-parameter compressor state (the EF 'optimizer buffer' pytree)."""
+
+    residuals: Any  # pytree matching params, leaves (M, *leaf_shape) f32
+
+
+def init_wire_state(params: Any, m: int) -> PytreeWireState:
+    """Zero EF residuals for an ``m``-client cohort over ``params``."""
+    res = jax.tree.map(
+        lambda w: jnp.zeros((m,) + w.shape, jnp.float32), params
+    )
+    return PytreeWireState(residuals=res)
+
+
+def pytree_wire_bytes(
+    pipeline: AggregatorPipeline, params: Any, m: int
+) -> dict[str, int]:
+    """Uplink bytes for an ``m``-client round over ``params``, per format.
+
+    ``wire_bytes`` is what actually travels (packed rows include the
+    chunk/lane padding the compressor emits); ``wire_bytes_ideal`` is the
+    unpadded ``ceil(d_l/8)`` floor; ``int8``/``f32`` are the quantized- and
+    full-precision baselines the 8x/32x savings compare against. Dense
+    (FedAvg) pipelines ship f32 for every leaf.
+    """
+    comp = pipeline.compressor
+    packed = ideal = dim = 0
+    for leaf in jax.tree.leaves(params):
+        d = int(leaf.size)
+        wb = comp.wire_bytes(d)
+        if comp.mode != "dense" and comp.topk_frac < 1.0:
+            k = max(int(d * comp.topk_frac), 1)
+            packed += 4 * k + (k + 7) // 8  # int32 indices + packed codes
+            ideal += 4 * k + (k + 7) // 8
+        else:
+            packed += wb if wb is not None else 4 * d
+            ideal += (d + 7) // 8 if wb is not None else 4 * d
+        dim += d
+    return {
+        "wire_bytes": m * packed,
+        "wire_bytes_ideal": m * ideal,
+        "wire_bytes_int8": m * dim,
+        "wire_bytes_f32": m * 4 * dim,
+    }
+
+
+def compress_pytree(
+    pipeline: AggregatorPipeline,
+    key: jax.Array,
+    deltas: Any,
+    b_scalar: jax.Array,
+    state: PytreeWireState,
+    *,
+    row_offset: jax.Array | int = 0,
+) -> tuple[list[Wire], PytreeWireState]:
+    """Client half per leaf: ``(M, *shape)`` deltas -> one wire per leaf.
+
+    Returns the wires in tree_flatten order plus the advanced EF state.
+    ``row_offset`` rebases cohort positions exactly as in
+    :meth:`ClientCompressor.compress` — a chunk of clients compressed at
+    offset ``g0`` emits the bits rows ``[g0, g0+M)`` of a one-shot
+    compress would.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    res_leaves = jax.tree.leaves(state.residuals)
+    m = leaves[0].shape[0]
+    wires, new_res = [], []
+    for i, (dl, rl) in enumerate(zip(leaves, res_leaves)):
+        d = int(dl[0].size)
+        wire, r_new = pipeline.compressor.compress(
+            leaf_key(key, i),
+            dl.reshape(m, d).astype(jnp.float32),
+            b_scalar,
+            rl.reshape(m, d).astype(jnp.float32),
+            row_offset=row_offset,
+        )
+        wires.append(wire)
+        new_res.append(jnp.reshape(r_new, rl.shape))
+    return wires, PytreeWireState(
+        residuals=jax.tree_util.tree_unflatten(treedef, new_res)
+    )
+
+
+def aggregate_pytree(
+    pipeline: AggregatorPipeline,
+    key: jax.Array,
+    deltas: Any,
+    b_scalar: jax.Array,
+    state: PytreeWireState,
+    *,
+    weights: jax.Array | None = None,
+) -> tuple[Any, PytreeWireState]:
+    """One-shot round over a pytree: compress every leaf, estimate theta.
+
+    Returns ``(theta_tree, state')`` with theta leaves shaped like the
+    parameters. ``weights`` (one per client) selects the weighted count
+    path of the server — staleness discounts or active-client masks.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    wires, new_state = compress_pytree(pipeline, key, deltas, b_scalar, state)
+    thetas = [
+        jnp.reshape(pipeline.estimate(w, weights), dl.shape[1:])
+        for w, dl in zip(wires, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, thetas), new_state
+
+
+def stream_aggregate_pytree(
+    pipeline: AggregatorPipeline,
+    key: jax.Array,
+    deltas: Any,
+    b_scalar: jax.Array,
+    state: PytreeWireState,
+    *,
+    client_chunk: int,
+) -> tuple[Any, PytreeWireState]:
+    """Client-streamed round: scan the cohort in chunks, per leaf.
+
+    Counts are additive over clients, so each leaf folds its cohort
+    through ``init_counts -> accumulate_counts -> finalize`` under
+    ``lax.scan`` with O(client_chunk * d_l / 8) resident wire — and the
+    ``row_offset`` key rebasing makes the result **bit-identical** to
+    :func:`aggregate_pytree` for every count-streaming scheme (PRoBit+ /
+    signSGD-MV / RSA): integer count addition is associative and the
+    draws depend only on absolute cohort position. EF residuals advance
+    chunk by chunk (rows are independent, so streamed EF equals dense EF
+    exactly). Top-k sparse wires do not count-stream; use
+    :func:`aggregate_pytree`.
+    """
+    comp, server = pipeline.compressor, pipeline.server
+    if server.stream_kind != "counts":
+        raise ValueError(
+            f"{type(server).__name__} (stream_kind={server.stream_kind!r}) "
+            "cannot client-stream; use aggregate_pytree"
+        )
+    if comp.topk_frac < 1.0:
+        raise ValueError("top-k sparse wires cannot count-stream")
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    res_leaves = jax.tree.leaves(state.residuals)
+    m = leaves[0].shape[0]
+    if m % client_chunk:
+        raise ValueError(
+            f"cohort size {m} not divisible by client_chunk {client_chunk}"
+        )
+    thetas, new_res = [], []
+    for i, (dl, rl) in enumerate(zip(leaves, res_leaves)):
+        d = int(dl[0].size)
+        d2 = dl.reshape(m, d).astype(jnp.float32)
+        r2 = rl.reshape(m, d).astype(jnp.float32)
+        lk = leaf_key(key, i)
+        p_bytes = comp.wire_bytes(d)
+        b_vec = comp.b_vector(d, b_scalar)
+
+        def chunk_step(carry, g, d2=d2, lk=lk):
+            counts, res_buf = carry
+            g0 = g * client_chunk
+            dch = jax.lax.dynamic_slice_in_dim(d2, g0, client_chunk, axis=0)
+            rch = jax.lax.dynamic_slice_in_dim(
+                res_buf, g0, client_chunk, axis=0
+            )
+            wire, r_new = comp.compress(lk, dch, b_scalar, rch, row_offset=g0)
+            counts = server.accumulate_counts(counts, wire.packed)
+            res_buf = jax.lax.dynamic_update_slice_in_dim(
+                res_buf, r_new, g0, axis=0
+            )
+            return (counts, res_buf), jnp.zeros(())
+
+        (counts, r_fin), _ = jax.lax.scan(
+            chunk_step,
+            (server.init_counts(p_bytes), r2),
+            jnp.arange(m // client_chunk),
+        )
+        thetas.append(jnp.reshape(server.finalize(counts, m, b_vec), dl.shape[1:]))
+        new_res.append(jnp.reshape(r_fin, rl.shape))
+    return (
+        jax.tree_util.tree_unflatten(treedef, thetas),
+        PytreeWireState(residuals=jax.tree_util.tree_unflatten(treedef, new_res)),
+    )

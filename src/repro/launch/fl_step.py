@@ -4,30 +4,57 @@ Cluster-simulated cross-silo FL (DESIGN.md §3): the global model is
 FSDP+TP-sharded over ("data", "model"); a ``lax.scan`` multiplexes clients
 in time, while the "pod" axis (when present) runs client groups in space.
 Per scan step each pod trains ONE client (its batch data-parallel over
-"data"), quantizes ``delta`` with the Eq.-5 compressor, and accumulates
-uint8 vote counts. Cross-pod traffic is the psum of the count pytree —
-1 byte/param instead of 4 (fp32 FedAvg), the paper's insight at the
-slowest-link level. After the scan the Eq.-13 ML estimate updates the
-global model, and the dynamic-b controller consumes the clients' one-bit
-loss votes.
+"data"), compresses its per-leaf delta through the shared packed wire,
+and folds the packed codes into int32 vote counts. After the scan the
+Eq.-13 ML estimate updates the global model and the dynamic-b controller
+consumes the clients' one-bit loss votes.
 
-The quantize probability and the count->theta estimate are NOT
-re-implemented here: both come from the shared aggregation pipeline
-(``repro.core.build_pipeline("probit_plus")``) so the mesh path speaks
-the same wire protocol as the simulation and the Pallas kernels.
+Wire contract (per parameter leaf)
+----------------------------------
+Nothing quantization-related is re-implemented here: the client at cohort
+position ``g`` compresses leaf ``l`` with the shared ``ClientCompressor``
+(``build_pipeline("probit_plus", rand_bits=...)``) keyed
+``fold_in(fold_in(round_key, l), g)`` — the
+:mod:`repro.fl.pytree_wire` schedule — so the mesh path, the CPU
+simulation (``fl/rounds.py``), the pytree simulation wire, and the Pallas
+kernels all emit bit-for-bit the same ``PackedWire`` rows:
+``padded_dim(d_l)/8`` uint8 bytes per leaf per client, **1 bit per
+parameter on the uplink** (the paper's 32x saving vs f32; leaves with
+``size % 8 != 0`` pad with deterministic 0 bits that ``finalize`` slices
+off). ``rand_bits=16`` selects the uint16-draw wire (same schedule,
+half the RNG memory; see :func:`repro.core.quantizer.threshold_u16` —
+saturated |delta| >= b votes stay certain, the sign-flip bug the shared
+path regression-guards).
+
+Count-dtype policy
+------------------
+The uint8 claim applies to the packed *wire rows only*. Vote counts
+accumulate in **int32** (matching ``ServerAggregator.init_counts``) —
+exact for cohorts up to 2**31 clients; a uint8 accumulator silently
+wraps mod 256 past 255 clients (the bug this rewrite fixes). Cross-pod
+traffic is the psum of the int32 count pytree induced by the sum over
+the pod axis.
+
+State
+-----
+This step is stateless round-to-round (params, b) -> (params, b): EF
+residuals and top-k masks need a per-client per-parameter buffer, which
+lives in :class:`repro.fl.pytree_wire.PytreeWireState` on the stateful
+simulation path — the mesh step runs the EF-off, dense-packed wire.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..core import build_pipeline
-from ..distributed import current_mesh, spec_for
+from ..core.bcontrol import BControlConfig, BState, update_b_from_vote
+from ..distributed import current_mesh
+from ..fl.pytree_wire import leaf_key
 from ..models import train_loss
 from ..models.config import ModelConfig
 
@@ -43,9 +70,28 @@ class DistFLConfig:
     # aggregator: "probit_plus" (paper, 1-bit votes) or "fedavg_fp32"
     # (full-precision baseline — what the paper's 32x claim compares against)
     aggregator: str = "probit_plus"
-    # quantizer randomness width: 16-bit thresholds halve the uniform-draw
+    # quantizer randomness width: 16-bit draws halve the uniform-draw
     # memory vs f32 at a 2^-16 probability granularity (§Perf lever)
     rand_bits: int = 32
+
+
+def bcontrol_config(fl: DistFLConfig) -> BControlConfig:
+    """The b-controller config this step shares with ``fl/rounds.py``."""
+    return BControlConfig(mode="dynamic", up=fl.b_up, down=fl.b_down)
+
+
+def update_b_dist(b: jax.Array, vote: jax.Array, fl: DistFLConfig) -> jax.Array:
+    """One controller step from the summed loss-bit vote.
+
+    Routed through :func:`repro.core.bcontrol.update_b_from_vote` — the
+    same function the simulation rounds call — so tie-vote handling
+    (vote == 0 contracts by ``down``) can never drift between the mesh
+    path and ``fl/rounds.py``.
+    """
+    state = update_b_from_vote(
+        BState(b=b, prev_vote=jnp.float32(0.0)), vote, bcontrol_config(fl)
+    )
+    return state.b
 
 
 def _n_pods() -> int:
@@ -68,28 +114,30 @@ def _constrain_clients(tree, leaf_specs):
     return jax.tree.map(one, tree, leaf_specs)
 
 
+def _constrain_pod(tree):
+    """Constrain wire/count leaves (n_pods, ...): leading dim over "pod"."""
+    mesh = current_mesh()
+    if mesh is None or "pod" not in mesh.axis_names:
+        return tree
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, P("pod")), tree
+    )
+
+
 def make_fl_train_step(cfg: ModelConfig, fl: DistFLConfig, param_specs):
     """Returns train_step(params, b, batch, key) -> (params, b, metrics).
 
     batch leaves: (m_seq, n_pods, local_steps, per_batch, ...) where
-    m_seq * n_pods = clients_per_round.
+    m_seq * n_pods = clients_per_round. Metrics include the per-round
+    uplink ``wire_bytes`` (packed, as shipped) next to the
+    ``wire_bytes_int8`` / ``wire_bytes_f32`` baselines.
     """
 
-    # Shared pipeline pieces: Eq.-5 bit probability (client half) and the
-    # Eq.-13 count->theta estimate (server half) — same objects the CPU
-    # simulation and kernels dispatch through.
-    pipeline = build_pipeline("probit_plus")
-
-    def quantize_leaf(key, delta, b):
-        p = pipeline.compressor.bit_probability(delta, b)
-        if fl.rand_bits == 16:
-            # 16-bit threshold compare: halves random-draw memory; the
-            # probability granularity of 2^-16 adds relative bias < 1.6e-5.
-            thresh = (p * 65536.0).astype(jnp.uint16)
-            u = jax.random.bits(key, delta.shape, jnp.uint16)
-            return u < thresh
-        u = jax.random.uniform(key, delta.shape, jnp.float32)
-        return u < p  # one-bit code; True <=> +1
+    # The full shared pipeline: Eq.-5 compressor (client half) and the
+    # count-accumulate -> Eq.-13 server half — the same objects the CPU
+    # simulation and the kernels dispatch through.
+    pipeline = build_pipeline("probit_plus", rand_bits=fl.rand_bits)
+    compressor, server = pipeline.compressor, pipeline.server
 
     def train_step(params, b, batch, key):
         m_seq = jax.tree.leaves(batch)[0].shape[0]
@@ -97,8 +145,13 @@ def make_fl_train_step(cfg: ModelConfig, fl: DistFLConfig, param_specs):
         m_total = m_seq * n_pods
         probit = fl.aggregator == "probit_plus"
 
-        def one_client(client_batch, ckey):
-            """client_batch leaves: (local_steps, per_batch, ...)."""
+        p_leaves, treedef = jax.tree_util.tree_flatten(params)
+        dims = [int(w.size) for w in p_leaves]
+        pbytes = [compressor.wire_bytes(d) for d in dims]
+
+        def one_client(client_batch, gidx):
+            """client_batch leaves: (local_steps, per_batch, ...); ``gidx``
+            is the client's cohort position — it keys the quantizer rows."""
 
             def lstep(local, sb):
                 loss, g = jax.value_and_grad(train_loss)(local, sb, cfg)
@@ -115,14 +168,17 @@ def make_fl_train_step(cfg: ModelConfig, fl: DistFLConfig, param_specs):
             local, losses = jax.lax.scan(lstep, params, client_batch)
             delta = jax.tree.map(lambda a, c: a - c, local, params)
             if probit:
-                leaves, treedef = jax.tree_util.tree_flatten(delta)
-                out = jax.tree_util.tree_unflatten(
-                    treedef,
-                    [
-                        quantize_leaf(jax.random.fold_in(ckey, i), leaf, b)
-                        for i, leaf in enumerate(leaves)
-                    ],
-                )
+                d_leaves = jax.tree.leaves(delta)
+                out = [
+                    compressor.compress(
+                        leaf_key(key, i),
+                        dl.reshape(1, d).astype(jnp.float32),
+                        b,
+                        jnp.zeros((), jnp.float32),  # EF off on the mesh path
+                        row_offset=gidx,
+                    )[0].packed
+                    for i, (dl, d) in enumerate(zip(d_leaves, dims))
+                ]
             else:
                 out = delta  # full-precision upload (FedAvg baseline)
             return out, (losses[0], losses[-1])
@@ -130,52 +186,78 @@ def make_fl_train_step(cfg: ModelConfig, fl: DistFLConfig, param_specs):
         def client_chunk(carry, xs):
             """Per-pod partial accumulation: the (n_pods, ...) accumulator
             stays sharded over "pod", so the client loop is collective-free
-            across pods; ONE deferred uint8 psum happens after the scan —
-            that psum IS the paper's one-bit aggregation on the wire
-            (1 byte/param of counts vs 4 bytes/param of fp32 deltas)."""
+            across pods; ONE deferred psum happens after the scan. The
+            uplink itself is the packed uint8 wire (1 bit/param/client);
+            what crosses pods is the int32 count pytree."""
             acc, votes = carry
-            cb, ck = xs  # leaves (n_pods, local_steps, pb, ...)
-            contrib, (l0, l1) = jax.vmap(one_client)(cb, ck)
-            contrib = _constrain_clients(contrib, param_specs)
+            cb, s = xs  # leaves (n_pods, local_steps, pb, ...); s = scan step
+            gidx = s * n_pods + jnp.arange(n_pods)
+            contrib, (l0, l1) = jax.vmap(one_client)(cb, gidx)
             if probit:
-                acc = jax.tree.map(
-                    lambda c, bits: c + bits.astype(jnp.uint8), acc, contrib
-                )
+                # contrib: per-leaf packed (n_pods, 1, P_i) uint8 wire rows
+                contrib = _constrain_pod(contrib)
+                acc = [
+                    jax.vmap(server.accumulate_counts)(a, w)
+                    for a, w in zip(acc, contrib)
+                ]
             else:
+                contrib = _constrain_clients(contrib, param_specs)
                 acc = jax.tree.map(
                     lambda c, d: c + d.astype(jnp.float32), acc, contrib
                 )
             votes = votes + jnp.sum(jnp.where(l1 < l0, 1, -1))
             return (acc, votes), (jnp.mean(l0), jnp.mean(l1))
 
-        acc0 = jax.tree.map(
-            lambda w: jnp.zeros((n_pods,) + w.shape, jnp.uint8 if probit else jnp.float32),
-            params,
-        )
-        acc0 = _constrain_clients(acc0, param_specs)
-        keys = jax.random.split(key, m_seq * n_pods).reshape(m_seq, n_pods, 2)
-        (acc, votes), (loss0, loss1) = jax.lax.scan(
-            client_chunk, (acc0, jnp.int32(0)), (batch, keys)
-        )
-        # the single cross-pod aggregation psum (uint8 counts / f32 deltas)
-        acc = jax.tree.map(
-            lambda a: jnp.sum(a, axis=0, dtype=a.dtype), acc
-        )
-
         if probit:
-            # Eq. 13 ML estimate; counts are exact vote totals across pods
-            # (the psum over "pod" is induced by the sum over the client dim)
-            def upd(cnt, w):
-                theta = pipeline.server.from_counts(cnt, m_total, b)
-                return (w.astype(jnp.float32) + theta).astype(w.dtype)
+            # per-leaf int32 vote-count carries, one row per pod
+            acc0 = [
+                jnp.tile(server.init_counts(p)[None], (n_pods, 1))
+                for p in pbytes
+            ]
+            acc0 = _constrain_pod(acc0)
         else:
+            acc0 = jax.tree.map(
+                lambda w: jnp.zeros((n_pods,) + w.shape, jnp.float32), params
+            )
+            acc0 = _constrain_clients(acc0, param_specs)
+        (acc, votes), (loss0, loss1) = jax.lax.scan(
+            client_chunk, (acc0, jnp.int32(0)), (batch, jnp.arange(m_seq))
+        )
+        # the single cross-pod reduction: int32 counts (exact up to 2**31
+        # clients — NOT the uint8 wire dtype) / f32 delta sums
+        if probit:
+            acc = [jnp.sum(a, axis=0, dtype=jnp.int32) for a in acc]
 
-            def upd(s, w):
-                return (w.astype(jnp.float32) + s / m_total).astype(w.dtype)
+            # Eq. 13 ML estimate per leaf from the exact vote counts
+            new_leaves = [
+                (
+                    w.astype(jnp.float32)
+                    + server.finalize(cnt, m_total, compressor.b_vector(d, b)).reshape(w.shape)
+                ).astype(w.dtype)
+                for w, cnt, d in zip(p_leaves, acc, dims)
+            ]
+            new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+            wire_row_bytes = sum(pbytes)
+        else:
+            acc = jax.tree.map(lambda a: jnp.sum(a, axis=0), acc)
+            new_params = jax.tree.map(
+                lambda s, w: (w.astype(jnp.float32) + s / m_total).astype(w.dtype),
+                acc,
+                params,
+            )
+            wire_row_bytes = 4 * sum(dims)
 
-        new_params = jax.tree.map(upd, acc, params)
-        b_new = jnp.where(votes > 0, b * fl.b_up, b * fl.b_down)
-        metrics = {"loss_first": jnp.mean(loss0), "loss_last": jnp.mean(loss1), "b": b_new}
+        b_new = update_b_dist(b, votes, fl)
+        metrics = {
+            "loss_first": jnp.mean(loss0),
+            "loss_last": jnp.mean(loss1),
+            "b": b_new,
+            # f32 round-trips ~7 digits; exact ints come from
+            # fl.pytree_wire.pytree_wire_bytes (static, outside the jit)
+            "wire_bytes": jnp.float32(m_total * wire_row_bytes),
+            "wire_bytes_int8": jnp.float32(m_total * sum(dims)),
+            "wire_bytes_f32": jnp.float32(m_total * 4 * sum(dims)),
+        }
         return new_params, b_new, metrics
 
     return train_step

@@ -7,12 +7,21 @@ mesh); on a TPU fleet the same entry point drives the production mesh.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
       --rounds 5 --clients 4 --seq 128 --per-batch 2
+
+Flags beyond the basics:
+  --aggregator {probit_plus,fedavg_fp32}  packed one-bit wire (default)
+      vs the full-precision FedAvg baseline the 32x claim compares to
+  --rand-bits {32,16}   quantizer draw width (16 halves RNG memory)
+  --json-out PATH       write per-round metrics + wire-byte report JSON
+  --smoke               exit nonzero unless every round's losses are
+      finite and the wire-byte report is nonzero (CI gate)
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -21,7 +30,9 @@ import numpy as np
 
 from .. import configs
 from ..checkpoint import save_checkpoint
+from ..core import build_pipeline
 from ..data import make_lm_streams
+from ..fl.pytree_wire import pytree_wire_bytes
 from ..models import build_specs, sample_batch
 from ..models.spec import init_params, param_pspecs, count_params
 from .fl_step import DistFLConfig, make_fl_train_step
@@ -41,6 +52,13 @@ def main():
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--lam", type=float, default=0.2)
     ap.add_argument("--b-init", type=float, default=0.01)
+    ap.add_argument(
+        "--aggregator", default="probit_plus",
+        choices=["probit_plus", "fedavg_fp32"],
+    )
+    ap.add_argument("--rand-bits", type=int, default=32, choices=[16, 32])
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -65,15 +83,32 @@ def main():
             local_steps=args.local_steps,
             lr=args.lr,
             lam=args.lam,
+            aggregator=args.aggregator,
+            rand_bits=args.rand_bits,
         )
         step = jax.jit(make_fl_train_step(cfg, fl, pspecs))
         b = jnp.float32(args.b_init)
+
+        # Exact static per-round uplink accounting (the jitted metric is
+        # the same number in f32): packed wire vs int8 vs f32 baselines.
+        wire_pipeline = build_pipeline(
+            "probit_plus" if args.aggregator == "probit_plus" else "fedavg",
+            rand_bits=args.rand_bits,
+        )
+        wire = pytree_wire_bytes(wire_pipeline, params, args.clients)
+        print(
+            f"uplink/round: {wire['wire_bytes']/1e6:.3f} MB packed "
+            f"(ideal {wire['wire_bytes_ideal']/1e6:.3f}) vs "
+            f"{wire['wire_bytes_int8']/1e6:.3f} MB int8 ({wire['wire_bytes_int8']/max(wire['wire_bytes_ideal'],1):.1f}x) / "
+            f"{wire['wire_bytes_f32']/1e6:.3f} MB f32 ({wire['wire_bytes_f32']/max(wire['wire_bytes_ideal'],1):.1f}x)"
+        )
 
         streams = make_lm_streams(
             0, args.clients, cfg.vocab, args.seq + 1,
             args.local_steps * args.per_batch * args.rounds,
         )
         key = jax.random.PRNGKey(1)
+        history = []
         for r in range(args.rounds):
             t0 = time.time()
             # batch leaves: (m_seq=clients, n_pods=1, local_steps, pb, ...)
@@ -105,14 +140,50 @@ def main():
                 }
             key, kr = jax.random.split(key)
             params, b, metrics = step(params, b, batch, kr)
+            history.append(
+                {
+                    "round": r,
+                    "loss_first": float(metrics["loss_first"]),
+                    "loss_last": float(metrics["loss_last"]),
+                    "b": float(b),
+                    "wire_bytes": float(metrics["wire_bytes"]),
+                    "seconds": time.time() - t0,
+                }
+            )
             print(
-                f"round {r}: loss {float(metrics['loss_first']):.4f} -> "
-                f"{float(metrics['loss_last']):.4f}  b={float(b):.5f}  "
-                f"({time.time()-t0:.1f}s)"
+                f"round {r}: loss {history[-1]['loss_first']:.4f} -> "
+                f"{history[-1]['loss_last']:.4f}  b={float(b):.5f}  "
+                f"wire={history[-1]['wire_bytes']/1e6:.3f}MB  "
+                f"({history[-1]['seconds']:.1f}s)"
             )
         if args.ckpt_dir:
             path = save_checkpoint(args.ckpt_dir, args.rounds, params, {"arch": cfg.name})
             print("checkpoint:", path)
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(
+                    {
+                        "arch": cfg.name,
+                        "aggregator": args.aggregator,
+                        "rand_bits": args.rand_bits,
+                        "clients": args.clients,
+                        "wire": wire,
+                        "rounds": history,
+                    },
+                    f,
+                    indent=2,
+                )
+            print("json:", args.json_out)
+        if args.smoke:
+            finite = all(
+                np.isfinite(h["loss_first"]) and np.isfinite(h["loss_last"])
+                for h in history
+            )
+            wired = all(h["wire_bytes"] > 0 for h in history) and wire["wire_bytes"] > 0
+            if not (finite and wired):
+                print(f"SMOKE FAIL: finite={finite} wired={wired}", file=sys.stderr)
+                sys.exit(1)
+            print("SMOKE OK")
 
 
 if __name__ == "__main__":

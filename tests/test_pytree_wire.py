@@ -1,0 +1,217 @@
+"""Pytree-wire parity suite.
+
+The contract under test: per-layer chunked compress/aggregate over a
+real parameter pytree is **bit-exact** with a flatten-per-leaf dense
+reference built straight from the shared pipeline — including leaves
+with size % 8 != 0, EF residual carry-over across rounds, top-k sparse
+wires, and the kernel engine resolved via ``kernels/ops.resolve_engine``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_pipeline
+from repro.fl.pytree_wire import (
+    PytreeWireState,
+    aggregate_pytree,
+    init_wire_state,
+    leaf_key,
+    pytree_wire_bytes,
+    stream_aggregate_pytree,
+)
+from repro.kernels import ops as kops
+
+M = 6
+
+
+def make_tree(key, m=M):
+    """Deltas over a small pytree; the (7,) leaf has size % 8 != 0 and the
+    (4, 5) leaf has size % 8 == 4, exercising pad-bit slicing."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": 0.02 * jax.random.normal(k1, (m, 4, 5)),
+        "bias": 0.02 * jax.random.normal(k2, (m, 7)),
+        "v": 0.02 * jax.random.normal(k3, (m, 2, 8)),
+    }
+
+
+def params_like(tree):
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def leafwise_dense_reference(pipeline, key, deltas, b_scalar, state):
+    """The flatten-and-concat oracle: each leaf flattened to (M, d_l) and
+    compressed/aggregated densely through the *same* pipeline with the
+    same per-leaf key; thetas concatenated in tree_flatten order."""
+    leaves, _ = jax.tree_util.tree_flatten(deltas)
+    res_leaves = jax.tree.leaves(state.residuals)
+    thetas, res_out = [], []
+    for i, (dl, rl) in enumerate(zip(leaves, res_leaves)):
+        m = dl.shape[0]
+        d = int(dl[0].size)
+        wire, r_new = pipeline.compressor.compress(
+            leaf_key(key, i),
+            dl.reshape(m, d).astype(jnp.float32),
+            b_scalar,
+            rl.reshape(m, d).astype(jnp.float32),
+        )
+        thetas.append(np.asarray(pipeline.estimate(wire)).ravel())
+        res_out.append(np.asarray(r_new).ravel())
+    return np.concatenate(thetas), np.concatenate(res_out)
+
+
+def flat_theta(theta_tree):
+    return np.concatenate(
+        [np.asarray(l).ravel() for l in jax.tree.leaves(theta_tree)]
+    )
+
+
+@pytest.mark.parametrize("scheme", ["probit_plus", "signsgd_mv", "rsa"])
+@pytest.mark.parametrize("client_chunk", [2, 3])
+def test_stream_equals_oneshot_bit_exact(scheme, client_chunk):
+    """Client-streamed == one-shot, exactly, for every count scheme."""
+    pipeline = build_pipeline(scheme)
+    deltas = make_tree(jax.random.PRNGKey(0))
+    state = init_wire_state(params_like(deltas), M)
+    key = jax.random.PRNGKey(42)
+    b = jnp.float32(0.05)
+    t1, s1 = aggregate_pytree(pipeline, key, deltas, b, state)
+    t2, s2 = stream_aggregate_pytree(
+        pipeline, key, deltas, b, state, client_chunk=client_chunk
+    )
+    for a, c in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+    for a, c in zip(jax.tree.leaves(s1.residuals), jax.tree.leaves(s2.residuals)):
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+
+
+@pytest.mark.parametrize("rand_bits", [32, 16])
+def test_leafwise_dense_reference(rand_bits):
+    """Pytree aggregate == per-leaf dense pipeline reference, bit-exact."""
+    pipeline = build_pipeline("probit_plus", rand_bits=rand_bits)
+    deltas = make_tree(jax.random.PRNGKey(1))
+    state = init_wire_state(params_like(deltas), M)
+    key = jax.random.PRNGKey(7)
+    b = jnp.float32(0.05)
+    ref, _ = leafwise_dense_reference(pipeline, key, deltas, b, state)
+    theta, _ = aggregate_pytree(pipeline, key, deltas, b, state)
+    assert np.array_equal(flat_theta(theta), ref)
+    # streamed path agrees with the same dense reference
+    t_stream, _ = stream_aggregate_pytree(
+        pipeline, key, deltas, b, state, client_chunk=3
+    )
+    assert np.array_equal(flat_theta(t_stream), ref)
+
+
+def test_ef_carryover_two_rounds():
+    """EF residuals advance identically on pytree and dense-reference
+    paths across two rounds (carry-over is where EF bugs hide)."""
+    pipeline = build_pipeline("probit_plus", error_feedback=True)
+    b = jnp.float32(0.05)
+    state = None
+    deltas0 = make_tree(jax.random.PRNGKey(2))
+    state = init_wire_state(params_like(deltas0), M)
+    ref_state = state
+    for r in range(2):
+        deltas = make_tree(jax.random.PRNGKey(10 + r))
+        key = jax.random.fold_in(jax.random.PRNGKey(5), r)
+        ref_theta, ref_res = leafwise_dense_reference(
+            pipeline, key, deltas, b, ref_state
+        )
+        theta, state = aggregate_pytree(pipeline, key, deltas, b, state)
+        assert np.array_equal(flat_theta(theta), ref_theta)
+        got_res = np.concatenate(
+            [np.asarray(l).ravel() for l in jax.tree.leaves(state.residuals)]
+        )
+        assert np.array_equal(got_res, ref_res)
+        # manually advance the reference state the same way
+        leaves, treedef = jax.tree_util.tree_flatten(deltas)
+        rl = jax.tree.leaves(ref_state.residuals)
+        new_rl = []
+        off = 0
+        for dl, r0 in zip(leaves, rl):
+            n = r0.size
+            new_rl.append(
+                jnp.asarray(ref_res[off : off + n]).reshape(r0.shape)
+            )
+            off += n
+        ref_state = PytreeWireState(
+            residuals=jax.tree_util.tree_unflatten(treedef, new_rl)
+        )
+    # EF actually carries mass: residuals are not all zero
+    assert np.abs(got_res).max() > 0
+
+
+def test_topk_pytree_matches_dense_reference():
+    pipeline = build_pipeline("probit_plus", topk_frac=0.5)
+    deltas = make_tree(jax.random.PRNGKey(3))
+    state = init_wire_state(params_like(deltas), M)
+    key = jax.random.PRNGKey(9)
+    b = jnp.float32(0.05)
+    ref, _ = leafwise_dense_reference(pipeline, key, deltas, b, state)
+    theta, _ = aggregate_pytree(pipeline, key, deltas, b, state)
+    assert np.array_equal(flat_theta(theta), ref)
+    with pytest.raises(ValueError, match="top-k"):
+        stream_aggregate_pytree(pipeline, key, deltas, b, state, client_chunk=2)
+
+
+def test_kernel_engine_parity():
+    """The kernel wire (resolved via resolve_engine — "ref" on CPU, the
+    bit-identical engine) produces the same thetas as the pure path."""
+    assert kops.resolve_engine() in ("ref", "pallas")
+    pure = build_pipeline("probit_plus")
+    kern = build_pipeline("probit_plus", use_kernels=True)
+    deltas = make_tree(jax.random.PRNGKey(4))
+    state = init_wire_state(params_like(deltas), M)
+    key = jax.random.PRNGKey(11)
+    b = jnp.float32(0.05)
+    t_pure, _ = aggregate_pytree(pure, key, deltas, b, state)
+    t_kern, _ = aggregate_pytree(kern, key, deltas, b, state)
+    assert np.array_equal(flat_theta(t_pure), flat_theta(t_kern))
+
+
+@pytest.mark.parametrize("rand_bits", [32, 16])
+def test_counts_exact_past_255_clients(rand_bits):
+    """M > 255 saturated cohort: every client votes a certain +1, so the
+    Eq.-13 estimate is exactly +b. A uint8 count accumulator would wrap
+    (300 % 256 = 44 -> theta ~ -0.70 b); int32 counts stay exact."""
+    m = 300
+    pipeline = build_pipeline("probit_plus", rand_bits=rand_bits)
+    deltas = {"w": jnp.ones((m, 3, 3)), "bias": jnp.ones((m, 5))}
+    state = init_wire_state(params_like(deltas), m)
+    b = jnp.float32(0.5)  # deltas >= b everywhere -> p = 1.0
+    theta, _ = aggregate_pytree(pipeline, jax.random.PRNGKey(0), deltas, b, state)
+    for leaf in jax.tree.leaves(theta):
+        assert np.array_equal(np.asarray(leaf), np.full(leaf.shape, 0.5, np.float32))
+
+
+def test_weighted_counts_match_unweighted_at_unit_weights():
+    pipeline = build_pipeline("probit_plus")
+    deltas = make_tree(jax.random.PRNGKey(6))
+    state = init_wire_state(params_like(deltas), M)
+    key = jax.random.PRNGKey(13)
+    b = jnp.float32(0.05)
+    t0, _ = aggregate_pytree(pipeline, key, deltas, b, state)
+    t1, _ = aggregate_pytree(
+        pipeline, key, deltas, b, state, weights=jnp.ones((M,))
+    )
+    for a, c in zip(jax.tree.leaves(t0), jax.tree.leaves(t1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=0)
+
+
+def test_wire_bytes_report():
+    """8x/32x accounting: ideal packed bytes are ceil(d/8) per leaf."""
+    pipeline = build_pipeline("probit_plus")
+    deltas = make_tree(jax.random.PRNGKey(8))
+    report = pytree_wire_bytes(pipeline, params_like(deltas), M)
+    d_total = 4 * 5 + 7 + 2 * 8
+    assert report["wire_bytes_int8"] == M * d_total
+    assert report["wire_bytes_f32"] == M * 4 * d_total
+    ideal = M * sum((d + 7) // 8 for d in (20, 7, 16))
+    assert report["wire_bytes_ideal"] == ideal
+    assert report["wire_bytes"] >= ideal
+    # dense pipelines ship f32
+    dense = pytree_wire_bytes(build_pipeline("fedavg"), params_like(deltas), M)
+    assert dense["wire_bytes"] == M * 4 * d_total
