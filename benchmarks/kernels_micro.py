@@ -36,7 +36,7 @@ from .common import emit, timed
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core import build_pipeline, padded_dim, probit_plus_from_updates  # noqa: E402
-from repro.core.quantizer import packed_counts  # noqa: E402
+from repro.core.quantizer import packed_counts, wire_bytes  # noqa: E402
 from repro.kernels import ops  # noqa: E402
 
 # use_kernels=True must stay within this factor of the pure-JAX packed
@@ -44,7 +44,7 @@ from repro.kernels import ops  # noqa: E402
 RATIO_THRESHOLD = 1.5
 
 
-def report_meta(n: int, m: int) -> dict:
+def report_meta(n: int, m: int, bits: int = 1) -> dict:
     engine = ops.resolve_engine()
     return {
         "backend": jax.default_backend(),
@@ -52,6 +52,7 @@ def report_meta(n: int, m: int) -> dict:
         "interpret": engine == "interpret",
         "n": n,
         "m": m,
+        "wire_bits": bits,
     }
 
 
@@ -102,19 +103,24 @@ def popcount_counts(n: int = 262_144, m: int = 256) -> dict:
     return out
 
 
-def pipeline_traffic(n: int = 262_144, m: int = 16) -> dict:
+def pipeline_traffic(n: int = 262_144, m: int = 16, bits: int = 1) -> dict:
     """End-to-end AggregatorPipeline: packed wire vs dense f32 codes.
 
     Reports the bytes each path moves for one aggregation round:
       * dense reference: (M, n) f32 code matrix read by the server
         -> 4 * M * n bytes (what the pre-pipeline runtime materialized);
       * dense int8 codes: M * n bytes (sign bytes, signSGD-style);
-      * packed wire: (M, P) uint8, P = ceil(n/8 per alignment) -> ~M * n/8
-        bytes — 8x below int8 codes, 32x below f32 codes.
+      * packed wire: (M, bits * P) uint8, P = ceil(n/8 per alignment) ->
+        ~bits * M * n/8 bytes — 8x below int8 codes and 32x below f32
+        codes at the paper's bits=1; uplink ratios come from the shared
+        ``repro.core.quantizer.wire_bytes`` helper so this report can
+        never drift from the actual wire.
 
     The kernel pipeline runs whatever engine the dispatch policy resolves
     for this backend (TPU -> Pallas, else the pure-JAX ref wire); the
-    emitted ``kernel_vs_jax_ratio`` is the regression gate.
+    emitted ``kernel_vs_jax_ratio`` is the regression gate, at every
+    ``bits`` (k > 1 routes both pipelines through the same chunked packer,
+    so the ratio stays near 1 by construction).
     """
     key = jax.random.PRNGKey(0)
     deltas = 0.01 * jax.random.normal(key, (m, n))
@@ -126,21 +132,24 @@ def pipeline_traffic(n: int = 262_144, m: int = 16) -> dict:
     dense_i8_bytes = m * n
 
     for label, pipe, pad in [
-        ("jax_packed", build_pipeline("probit_plus"), padded_dim(n)),
-        ("kernel_packed", build_pipeline("probit_plus", use_kernels=True),
+        ("jax_packed", build_pipeline("probit_plus", wire_bits=bits),
+         padded_dim(n)),
+        ("kernel_packed",
+         build_pipeline("probit_plus", use_kernels=True, wire_bits=bits),
          ops.padded_len(n)),
     ]:
         run = jax.jit(lambda k, d, bb, r, p=pipe: p(k, d, bb, r)[0])
         us = timed(lambda: run(key, deltas, b, res), reps=10)
-        wire_bytes = m * pad // 8  # (M, d_pad/8) uint8 — static, no re-run
+        row_bytes = wire_bytes(n, bits, d_pad=pad)  # static, no re-run
+        total_bytes = m * row_bytes
         out[f"pipeline_{label}_us"] = us
-        out[f"pipeline_{label}_wire_bytes"] = wire_bytes
+        out[f"pipeline_{label}_wire_bytes"] = total_bytes
         emit(
             f"pipeline_{label}",
             us,
-            f"M={m};n={n};wire_bytes={wire_bytes}"
-            f";vs_int8_codes={dense_i8_bytes / wire_bytes:.1f}x"
-            f";vs_f32_codes={dense_f32_bytes / wire_bytes:.1f}x",
+            f"M={m};n={n};bits={bits};wire_bytes={total_bytes}"
+            f";vs_int8_codes={dense_i8_bytes / total_bytes:.1f}x"
+            f";vs_f32_codes={dense_f32_bytes / total_bytes:.1f}x",
         )
 
     ratio = out["pipeline_kernel_packed_us"] / out["pipeline_jax_packed_us"]
@@ -196,14 +205,14 @@ def roofline_stages(n: int, m: int, kernels: dict) -> dict:
     return {"memcpy_bound_gbs": bound, "stages": stages}
 
 
-def main(n: int = 262_144, m: int = 16) -> dict:
+def main(n: int = 262_144, m: int = 16, bits: int = 1) -> dict:
     key = jax.random.PRNGKey(0)
     delta = 0.01 * jax.random.normal(key, (n,))
     b = jnp.full((n,), 0.05)
     out: dict = {}
 
     us = timed(lambda: ops.stoch_quant_pack(key, delta, b), reps=10)
-    ratio = 32.0  # fp32 -> 1 bit
+    ratio = 4.0 * n / wire_bytes(n)  # fp32 -> 1 bit (the 1-bit kernel)
     out["stoch_quant_pack"] = us
     emit("kernel_stoch_quant_pack", us, f"n={n};upload_compression={ratio:.0f}x")
 
@@ -222,15 +231,15 @@ def main(n: int = 262_144, m: int = 16) -> dict:
     out["prox_sgd"] = us
     emit("kernel_prox_sgd", us, "fused_passes=1_vs_4")
 
-    out.update(pipeline_traffic(n, m))
+    out.update(pipeline_traffic(n, m, bits))
     out.update(popcount_counts(n, max(m, 256)))
     return out
 
 
-def run(n: int, m: int, out_path: str | None, smoke: bool) -> int:
-    kernels = main(n, m)
+def run(n: int, m: int, out_path: str | None, smoke: bool, bits: int = 1) -> int:
+    kernels = main(n, m, bits)
     results = {
-        "meta": report_meta(n, m),
+        "meta": report_meta(n, m, bits),
         "kernels": kernels,
         "roofline": roofline_stages(n, m, kernels),
     }
@@ -260,6 +269,14 @@ if __name__ == "__main__":
     parser.add_argument("--n", type=int, default=262_144)
     parser.add_argument("--m", type=int, default=16)
     parser.add_argument(
+        "--bits",
+        type=int,
+        default=1,
+        choices=(1, 2, 4),
+        help="wire width for the pipeline cells (1 = the paper's wire; "
+        "CI smoke also runs a k=2 cell)",
+    )
+    parser.add_argument(
         "--smoke",
         action="store_true",
         help="small size, no artifact, exit 1 if kernel/jax ratio "
@@ -274,4 +291,4 @@ if __name__ == "__main__":
     a = parser.parse_args()
     if a.smoke:
         a.n, a.m, a.out = 65_536, 8, None
-    sys.exit(run(a.n, a.m, a.out, a.smoke))
+    sys.exit(run(a.n, a.m, a.out, a.smoke, a.bits))

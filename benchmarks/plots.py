@@ -1,0 +1,125 @@
+"""Campaign-native trajectory plots: per-round mean ± 95% CI bands.
+
+Matplotlib is an optional dependency of the benchmark harness — every
+entry point here degrades to a no-op returning ``None`` when it is not
+importable (CI containers without a plotting stack still produce the
+JSON artifacts; the figure is a bonus, never a gate).
+
+Two input shapes are accepted:
+
+* a live :class:`repro.sim.metrics.CampaignResult` — full seed axes are
+  available, so the band is the z*SEM half-width from
+  :meth:`CellResult.trajectory`;
+* a saved campaign JSON artifact (path or loaded dict, the
+  :meth:`CampaignResult.to_json` structure) — only per-round means
+  survive serialization, so the band collapses to the line.
+
+  PYTHONPATH=src python -m benchmarks.plots reports/fig_bits_frontier.json
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+__all__ = ["have_matplotlib", "plot_trajectories"]
+
+
+def have_matplotlib() -> bool:
+    try:
+        import matplotlib  # noqa: F401
+
+        return True
+    except ImportError:
+        return False
+
+
+def _cell_series(result: Any, metric: str) -> dict[str, tuple[np.ndarray, np.ndarray]]:
+    """name -> (mean, ci_half) per-round arrays, from either input shape."""
+    if isinstance(result, str):
+        with open(result) as f:
+            result = json.load(f)
+    if isinstance(result, dict):
+        series = {}
+        for name, cell in result.get("cells", {}).items():
+            traj = cell.get("trajectory_mean", {}).get(metric)
+            if traj is None:
+                continue
+            mean = np.asarray(traj, np.float64)
+            series[name] = (mean, np.zeros_like(mean))
+        return series
+    # live CampaignResult
+    return {
+        c.name: c.trajectory(metric)
+        for c in result.cells
+        if metric in c.metrics
+    }
+
+
+def plot_trajectories(
+    result: Any,
+    metric: str = "theta_mse",
+    *,
+    out_path: str,
+    cells: list[str] | None = None,
+    title: str | None = None,
+    logy: bool = False,
+) -> str | None:
+    """One line (+ CI band) per campaign cell; returns the written path.
+
+    ``result`` is a CampaignResult, a campaign-JSON dict, or a path to
+    one. ``cells`` filters (and orders) the plotted cell names. Returns
+    ``None`` when matplotlib is unavailable or no cell carries ``metric``.
+    """
+    if not have_matplotlib():
+        return None
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    series = _cell_series(result, metric)
+    if cells is not None:
+        series = {n: series[n] for n in cells if n in series}
+    if not series:
+        return None
+
+    fig, ax = plt.subplots(figsize=(7, 4.2))
+    for name, (mean, half) in series.items():
+        rounds = np.arange(1, len(mean) + 1)
+        (line,) = ax.plot(rounds, mean, label=name, linewidth=1.4)
+        if np.any(half > 0):
+            ax.fill_between(
+                rounds, mean - half, mean + half,
+                color=line.get_color(), alpha=0.18, linewidth=0,
+            )
+    ax.set_xlabel("round")
+    ax.set_ylabel(metric)
+    if logy:
+        ax.set_yscale("log")
+    if title:
+        ax.set_title(title)
+    ax.legend(fontsize=7, ncol=2)
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    fig.savefig(out_path, dpi=140)
+    plt.close(fig)
+    return out_path
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path")
+    ap.add_argument("--metric", default="theta_mse")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--logy", action="store_true")
+    a = ap.parse_args()
+    out = a.out or a.json_path.rsplit(".", 1)[0] + f"_{a.metric}.png"
+    path = plot_trajectories(a.json_path, a.metric, out_path=out, logy=a.logy)
+    print(path or "matplotlib unavailable; no plot written")

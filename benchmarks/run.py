@@ -23,6 +23,7 @@ def main() -> None:
     from . import fig3_dynamic_b, fig4_clients_privacy, table1_byzantine
     from . import fig_async_staleness, fig_privacy_amplification
     from . import fig_campaign_throughput, fig_streaming_clients
+    from . import fig_bits_frontier
     from . import theorem_rates, kernels_micro, roofline
 
     results = {}
@@ -47,6 +48,8 @@ def main() -> None:
     results["fig_streaming"] = fig_streaming_clients.main(
         m_grid=(1_000, 10_000, 100_000) if args.quick else None
     )
+    print("# --- Bits frontier: wire_bits x byz_frac x eps grid ---")
+    results["fig_bits"] = fig_bits_frontier.main(rounds)
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -12,14 +12,24 @@ split into two halves joined by an explicit wire format:
     error feedback -> top-k selection -> stochastic binarize (Eq. 5) ->
     uint8 bit-pack. Emits one of three wire formats:
 
-    * :class:`PackedWire` — the **canonical** format: an ``(M, d_pad/8)``
-      uint8 matrix of LSB-first packed one-bit codes plus the public
-      range vector ``b`` (d,). This is 1 bit/parameter on the wire — the
-      paper's 32x upload saving vs f32, realized in memory traffic too
-      because both producer and consumer work in d-chunks
-      (:func:`repro.core.quantizer.packed_binarize_batch` /
+    * :class:`PackedWire` — the **canonical** format: an
+      ``(M, bits * d_pad/8)`` uint8 matrix of LSB-first packed codes plus
+      the public range vector ``b`` (d,) and the static per-value width
+      ``bits`` (``wire_bits`` in {1, 2, 4}; 1 is the paper's wire,
+      bit-exact with pre-k-bit history). ``bits`` bits/parameter on the
+      wire — the paper's 32x upload saving vs f32 at k=1, realized in
+      memory traffic too because both producer and consumer work in
+      d-chunks (:func:`repro.core.quantizer.packed_binarize_batch` /
+      :func:`repro.core.quantizer.packed_quantize_batch` /
       :func:`repro.core.quantizer.packed_counts`) and the dense (M, d)
-      code tensor never materializes.
+      code tensor never materializes. k > 1 levels travel as ``bits``
+      one-bit planes concatenated plane-major along the byte axis, so the
+      count protocol below consumes them unchanged.
+    * :class:`HeteroWire` — HeteroSAg-style per-client bit-widths: the
+      cohort is partitioned into contiguous groups of equal ``bits``,
+      each group an independent :class:`PackedWire`; the server
+      aggregates per group and MLE-merges with inverse-variance weights
+      ``M_g * (2**k_g - 1)**2``.
     * :class:`SparseWire` — top-k variant: per-client index sets plus
       packed codes (beyond-paper extension, see ``core/sparse.py``).
     * :class:`DenseWire` — full-precision passthrough for the FedAvg /
@@ -35,6 +45,13 @@ split into two halves joined by an explicit wire format:
     * RSA      : ``step * (2 N_i - M)``             [Li et al. 2019]
 
     FedAvg / Fed-GM consume :class:`DenseWire` directly.
+
+    At k > 1 the count carry of a ``bits * d_pad/8``-byte wire row is the
+    flattened **per-plane** vote count — the sufficient statistic of the
+    (L, d) per-level histogram's mean (``sum_l l N_l = sum_p 2^p
+    N_plane_p``) — and PRoBit+'s finalize becomes the L-level multinomial
+    ML estimate :func:`kbit_estimate_from_counts`, which reduces to Eq. 13
+    at k = 1 (the k = 1 path keeps the literal Eq. 13 code, bit-exact).
 
 An :class:`AggregatorPipeline` bundles one compressor with one server
 aggregator; :func:`build_pipeline` resolves a registered name
@@ -57,21 +74,26 @@ from typing import Callable, Union
 import jax
 import jax.numpy as jnp
 
-from .privacy import DPConfig
+from .privacy import DPConfig, rr_gamma
 from .quantizer import (
     PACK_CHUNK,
+    WIRE_BITS,
     codes_to_counts,
     packed_binarize_batch,
     packed_counts,
+    packed_quantize_batch,
     packed_sign_batch,
     packed_weighted_counts,
     padded_dim,
     stochastic_binarize,
     binarize_prob,
 )
+from .quantizer import wire_bytes as _wire_row_bytes
 
 __all__ = [
     "ml_estimate_from_counts",
+    "kbit_estimate_from_counts",
+    "hetero_client_groups",
     "staleness_weights",
     "probit_plus_aggregate",
     "probit_plus_from_updates",
@@ -80,6 +102,7 @@ __all__ = [
     "signsgd_mv_aggregate",
     "rsa_aggregate",
     "PackedWire",
+    "HeteroWire",
     "SparseWire",
     "DenseWire",
     "ClientCompressor",
@@ -101,6 +124,67 @@ def ml_estimate_from_counts(counts: jax.Array, m: int, b: jax.Array) -> jax.Arra
     likelihood (Eq. 12); it equals ``mean_m(c_i^m) * b_i``.
     """
     return (2.0 * counts.astype(jnp.float32) - m) / m * b
+
+
+def kbit_estimate_from_counts(
+    counts: jax.Array,
+    m,
+    b: jax.Array,
+    bits: int,
+    gamma: jax.Array | None = None,
+) -> jax.Array:
+    """Eq. 13 generalized to the L-level multinomial, from plane counts.
+
+    ``counts`` is the ``(bits, d)`` per-plane vote count (plane ``p``
+    counts bit ``p`` of each client's level index); the mean level
+    ``sum_p 2^p N_p / M`` is the sufficient statistic the full (L, d)
+    per-level histogram contributes to the grid-mean ML estimate::
+
+        theta_hat_i = -b_i + (2 b_i / (L-1)) * mean_level_i
+
+    — the sample mean of the dequantized levels, i.e. the ML estimate of
+    the mean parameter constrained to [-b, b] (clipped there, so the
+    estimate is always bounded by the public range; at k = 1 the formula
+    collapses to ``(2 N - M)/M * b``, Eq. 13 — the k = 1 wire keeps the
+    literal :func:`ml_estimate_from_counts` code path for bit-exactness).
+    ``gamma`` debiases the randomized-response DP wire: the uniform level
+    mix has grid mean 0, so ``E[v] = (1-gamma) * theta`` and the estimate
+    rescales by ``1/(1-gamma)`` before clipping. Monotone non-decreasing
+    in every count (all plane weights are positive), which the property
+    tests assert.
+    """
+    n_steps = (1 << bits) - 1
+    weights = (2.0 ** jnp.arange(bits, dtype=jnp.float32))[:, None]
+    mean_level = jnp.sum(weights * counts.astype(jnp.float32), axis=0) / m
+    b = jnp.broadcast_to(b, mean_level.shape).astype(jnp.float32)
+    theta = -b + (2.0 * b / n_steps) * mean_level
+    if gamma is not None:
+        theta = theta / jnp.maximum(1.0 - gamma, 1e-6)
+    return jnp.clip(theta, -b, b)
+
+
+def hetero_client_groups(client_bits) -> tuple[tuple[int, int, int], ...]:
+    """Run-length encode per-client bit-widths into contiguous groups.
+
+    ``(k_0, k_1, ...)`` (one entry per cohort row) -> ``((start, stop,
+    bits), ...)`` — the HeteroSAg-style client groups the compressor
+    compresses independently and the server MLE-merges. Non-contiguous
+    equal-bits clients simply form more groups (correctness is unchanged;
+    sort the cohort by bit-width to minimize group count).
+    """
+    bits_list = tuple(int(k) for k in client_bits)
+    for k in bits_list:
+        if k not in WIRE_BITS:
+            raise ValueError(
+                f"per-client bit-widths must be in {WIRE_BITS}, got {k}"
+            )
+    groups: list[tuple[int, int, int]] = []
+    start = 0
+    for i in range(1, len(bits_list) + 1):
+        if i == len(bits_list) or bits_list[i] != bits_list[start]:
+            groups.append((start, i, bits_list[start]))
+            start = i
+    return tuple(groups)
 
 
 def staleness_weights(
@@ -217,11 +301,19 @@ def rsa_aggregate(codes: jax.Array, step: float = 0.01) -> jax.Array:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PackedWire:
-    """Canonical one-bit wire: (M, d_pad/8) uint8 packed codes + range b."""
+    """Canonical wire: (M, bits * d_pad/8) uint8 packed codes + range b.
 
-    packed: jax.Array  # (M, P) uint8, P * 8 >= d
+    ``bits = 1`` is the paper's one-bit wire, byte-identical to the
+    pre-k-bit format. ``bits > 1`` carries the level index as ``bits``
+    one-bit planes concatenated plane-major along the byte axis, each
+    plane packed exactly like the one-bit wire (chunk-ordered, byte-major,
+    LSB-first) — see :func:`repro.core.quantizer.pack_levels`.
+    """
+
+    packed: jax.Array  # (M, bits * P) uint8, P * 8 >= d
     b: jax.Array  # (d,) f32 public quantization range
     d: int = dataclasses.field(metadata=dict(static=True))  # true dimension
+    bits: int = dataclasses.field(default=1, metadata=dict(static=True))
 
     @property
     def n_clients(self) -> int:
@@ -230,6 +322,35 @@ class PackedWire:
     @property
     def wire_bytes(self) -> int:
         return self.packed.shape[0] * self.packed.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HeteroWire:
+    """HeteroSAg-style heterogeneous wire: per-client bit-widths.
+
+    The cohort is partitioned into contiguous groups of equal bit-width
+    (:func:`hetero_client_groups`); each group travels as an independent
+    :class:`PackedWire` over the same coordinate range. The server
+    aggregates each group with its own L-level ML estimate and merges with
+    inverse-variance weights ``M_g * (2**k_g - 1)**2`` (the per-level
+    multinomial variance scales as ``step_g**2 / M_g`` and
+    ``step_g = 2b/(L_g - 1)``).
+    """
+
+    wires: tuple  # tuple[PackedWire, ...], group order = cohort order
+
+    @property
+    def n_clients(self) -> int:
+        return sum(w.n_clients for w in self.wires)
+
+    @property
+    def d(self) -> int:
+        return self.wires[0].d
+
+    @property
+    def wire_bytes(self) -> int:
+        return sum(w.wire_bytes for w in self.wires)
 
 
 @jax.tree_util.register_dataclass
@@ -252,7 +373,7 @@ class DenseWire:
     updates: jax.Array  # (M, d) f32
 
 
-Wire = Union[PackedWire, SparseWire, DenseWire]
+Wire = Union[PackedWire, HeteroWire, SparseWire, DenseWire]
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +408,14 @@ class ClientCompressor:
     # draws against a uint32 threshold (half the RNG memory; see
     # quantizer.threshold_u16). Kernel and top-k wires require 32.
     rand_bits: int = 32
+    # Wire width k in {1, 2, 4} bits/parameter. 1 is the paper's one-bit
+    # wire (bit-exact with pre-k-bit history); k > 1 quantizes onto the
+    # uniform 2**k-level grid and, under DP, mixes in L-level randomized
+    # response (see privacy.rr_gamma).
+    wire_bits: int = 1
+    # HeteroSAg-style per-client bit-widths: one entry per cohort row,
+    # each in WIRE_BITS. Overrides wire_bits; emits a HeteroWire.
+    client_bits: tuple | None = None
 
     def __post_init__(self):
         if self.rand_bits not in (16, 32):
@@ -295,6 +424,38 @@ class ClientCompressor:
             raise ValueError("rand_bits=16 is not supported on the kernel wire")
         if self.rand_bits == 16 and self.topk_frac < 1.0:
             raise ValueError("rand_bits=16 is not supported on the top-k wire")
+        if self.wire_bits not in WIRE_BITS:
+            raise ValueError(
+                f"wire_bits must be one of {WIRE_BITS}, got {self.wire_bits}"
+            )
+        if self.wire_bits > 1:
+            if self.mode != "pack_stochastic":
+                raise ValueError(
+                    "wire_bits > 1 requires the pack_stochastic wire "
+                    f"(got mode={self.mode!r})"
+                )
+            if self.topk_frac < 1.0:
+                raise ValueError("wire_bits > 1 is not supported on the top-k wire")
+            if self.rand_bits != 32:
+                raise ValueError("wire_bits > 1 requires rand_bits=32")
+        if self.client_bits is not None:
+            object.__setattr__(
+                self, "client_bits", tuple(int(k) for k in self.client_bits)
+            )
+            hetero_client_groups(self.client_bits)  # validates each entry
+            if self.mode != "pack_stochastic":
+                raise ValueError(
+                    "per-client bit-widths require the pack_stochastic wire"
+                )
+            if self.use_kernels:
+                raise ValueError(
+                    "per-client bit-widths are not supported on the kernel "
+                    "wire (compress per-group without use_kernels)"
+                )
+            if self.topk_frac < 1.0:
+                raise ValueError(
+                    "per-client bit-widths are not supported on the top-k wire"
+                )
 
     # The Eq.-5 bit probability — shared with the mesh path (fl_step).
     bit_probability = staticmethod(binarize_prob)
@@ -326,19 +487,31 @@ class ClientCompressor:
         if self.use_kernels and self.mode == "pack_stochastic":
             from ..kernels import ops as kops
 
-            return kops.padded_len(d) // 8
-        return padded_dim(d, self.chunk) // 8
+            return _wire_row_bytes(d, self.wire_bits, d_pad=kops.padded_len(d))
+        return _wire_row_bytes(d, self.wire_bits, d_pad=padded_dim(d, self.chunk))
 
     def _b_vector(self, eff: jax.Array, b_scalar: jax.Array) -> jax.Array:
         d = eff.shape[1]
+        # k > 1 earns its (eps, 0) guarantee from randomized-response
+        # mixing (privacy.rr_gamma), not the Theorem-3 b-floor margin,
+        # so the range stays at the honest b.
+        dp = self.dp if self.wire_bits == 1 else DPConfig(0.0)
         if self.b_mode == "oracle":
             from .bcontrol import oracle_b
 
-            return oracle_b(eff, self.dp)
+            return oracle_b(eff, dp)
         b_eff = b_scalar
-        if self.dp.enabled:
-            b_eff = b_eff + (1.0 + 1.0 / self.dp.epsilon) * self.dp.l1_sensitivity
+        if dp.enabled:
+            b_eff = b_eff + (1.0 + 1.0 / dp.epsilon) * dp.l1_sensitivity
         return jnp.full((d,), b_eff, jnp.float32)
+
+    def _gamma(self, b_vec: jax.Array) -> jax.Array | None:
+        """RR mixing weight of the k-bit DP wire (None when not mixing)."""
+        if self.wire_bits > 1 and self.dp.enabled:
+            return rr_gamma(
+                self.dp.epsilon, self.dp.l1_sensitivity, b_vec, self.wire_bits
+            )
+        return None
 
     def compress(
         self,
@@ -368,6 +541,35 @@ class ClientCompressor:
                 d=d,
             )
             return wire, residuals
+
+        if self.client_bits is not None:
+            # HeteroSAg-style groups: compress each contiguous equal-bits
+            # group through a homogeneous sub-compressor, rebasing the
+            # counter-derived keys so each row draws the bits of its
+            # global cohort position.
+            if len(self.client_bits) != deltas.shape[0]:
+                raise ValueError(
+                    f"client_bits has {len(self.client_bits)} entries for "
+                    f"a {deltas.shape[0]}-client cohort"
+                )
+            wires = []
+            res_parts = []
+            for start, stop, gbits in hetero_client_groups(self.client_bits):
+                sub = dataclasses.replace(
+                    self, client_bits=None, wire_bits=gbits
+                )
+                w, r = sub.compress(
+                    key,
+                    deltas[start:stop],
+                    b_scalar,
+                    residuals[start:stop],
+                    row_offset=row_offset + start,
+                )
+                wires.append(w)
+                res_parts.append(r)
+            return HeteroWire(wires=tuple(wires)), jnp.concatenate(
+                res_parts, axis=0
+            )
 
         # PRoBit+ (pack_stochastic)
         m, d = deltas.shape
@@ -427,11 +629,28 @@ class ClientCompressor:
 
             packed, res = kops.stoch_quant_compress_batch(
                 key, eff, b_vec, row_offset=row_offset, chunk=self.chunk,
-                want_residual=use_ef,
+                want_residual=use_ef, bits=self.wire_bits,
+                gamma=self._gamma(b_vec),
             )
             if use_ef:
                 residuals = res
-            return PackedWire(packed=packed, b=b_vec, d=d), residuals
+            return (
+                PackedWire(packed=packed, b=b_vec, d=d, bits=self.wire_bits),
+                residuals,
+            )
+
+        if self.wire_bits > 1:
+            packed, res = packed_quantize_batch(
+                key, eff, b_vec, bits=self.wire_bits, chunk=self.chunk,
+                want_residual=use_ef, row_offset=row_offset,
+                gamma=self._gamma(b_vec),
+            )
+            if use_ef:
+                residuals = res
+            return (
+                PackedWire(packed=packed, b=b_vec, d=d, bits=self.wire_bits),
+                residuals,
+            )
 
         packed, res = packed_binarize_batch(
             key, eff, b_vec, chunk=self.chunk, want_residual=use_ef,
@@ -565,14 +784,62 @@ class ServerAggregator:
 
 @dataclasses.dataclass(frozen=True)
 class ProBitPlusServer(ServerAggregator):
-    """Eq. 13 ML estimate; optionally via the fused Pallas count kernel."""
+    """Eq. 13 ML estimate; optionally via the fused Pallas count kernel.
+
+    ``wire_bits > 1`` switches :meth:`finalize` to the L-level multinomial
+    estimate :func:`kbit_estimate_from_counts` — the count *accumulation*
+    is untouched, because the plane-major k-bit wire makes the flat count
+    carry exactly the per-plane vote counts. ``dp`` mirrors the
+    compressor's config so the server can debias the randomized-response
+    mix (same closed-form gamma from the public ``(eps, Delta_1, b, k)``).
+    """
 
     use_kernels: bool = False
+    wire_bits: int = 1
+    dp: DPConfig = DPConfig(0.0)
 
     def from_counts(self, counts, m, b):
         return ml_estimate_from_counts(counts, m, b)
 
+    def finalize(self, counts: jax.Array, m, b: jax.Array) -> jax.Array:
+        if self.wire_bits == 1:
+            return super().finalize(counts, m, b)
+        d = b.shape[0]
+        plane = counts.shape[0] // self.wire_bits
+        plane_counts = counts.reshape(self.wire_bits, plane)[:, :d]
+        gamma = None
+        if self.dp.enabled:
+            gamma = rr_gamma(
+                self.dp.epsilon, self.dp.l1_sensitivity, b, self.wire_bits
+            )
+        return kbit_estimate_from_counts(
+            plane_counts, m, b, self.wire_bits, gamma
+        )
+
     def aggregate(self, wire: Wire, weights: jax.Array | None = None) -> jax.Array:
+        if isinstance(wire, PackedWire) and wire.bits != self.wire_bits:
+            # The wire's static width is authoritative (a pipeline built
+            # at k=1 can still consume a k-bit wire and vice versa).
+            srv = dataclasses.replace(self, wire_bits=wire.bits)
+            return srv.aggregate(wire, weights)
+        if isinstance(wire, HeteroWire):
+            # Per-group L-level estimates, merged with inverse-variance
+            # weights M_g * (2**k_g - 1)**2 (step_g**2 / M_g variance).
+            num = jnp.zeros((wire.d,), jnp.float32)
+            den = 0.0
+            off = 0
+            for w in wire.wires:
+                srv = dataclasses.replace(
+                    self, wire_bits=w.bits, use_kernels=False
+                )
+                wsel = (
+                    None if weights is None else weights[off : off + w.n_clients]
+                )
+                gw = w.n_clients * ((1 << w.bits) - 1) ** 2
+                num = num + gw * srv.aggregate(w, wsel)
+                den += gw
+                off += w.n_clients
+            return num / den
         if isinstance(wire, SparseWire):
             if weights is not None:
                 raise TypeError("weighted aggregation needs a dense PackedWire")
@@ -584,7 +851,11 @@ class ProBitPlusServer(ServerAggregator):
             # The fused count kernel has no weighted variant; the chunked
             # pure-JAX weighted count consumes the same packed wire.
             return super().aggregate(wire, weights)
-        if self.use_kernels and isinstance(wire, PackedWire):
+        if (
+            self.use_kernels
+            and isinstance(wire, PackedWire)
+            and wire.bits == 1
+        ):
             from ..kernels import ops as kops
 
             # The kernel expects 1024-lane (128-byte) alignment; a wire from
@@ -757,6 +1028,8 @@ def build_pipeline(
     use_kernels: bool = False,
     chunk: int = PACK_CHUNK,
     rand_bits: int = 32,
+    wire_bits: int = 1,
+    client_bits: tuple | None = None,
 ) -> AggregatorPipeline:
     """Resolve a registered aggregator name into a configured pipeline."""
     try:
@@ -765,6 +1038,11 @@ def build_pipeline(
         raise ValueError(
             f"unknown aggregator {name!r}; available: {available_aggregators()}"
         ) from None
+    if (wire_bits != 1 or client_bits is not None) and name != "probit_plus":
+        raise ValueError(
+            "wire_bits > 1 / per-client bit-widths are only supported by "
+            f"the probit_plus wire, got {name!r}"
+        )
     return builder(
         dp=dp,
         b_mode=b_mode,
@@ -775,13 +1053,15 @@ def build_pipeline(
         use_kernels=use_kernels,
         chunk=chunk,
         rand_bits=rand_bits,
+        wire_bits=wire_bits,
+        client_bits=client_bits,
     )
 
 
 @_register("probit_plus")
 def _build_probit_plus(
     *, dp, b_mode, error_feedback, topk_frac, agg_step, gm_iters, use_kernels,
-    chunk, rand_bits,
+    chunk, rand_bits, wire_bits=1, client_bits=None,
 ):
     kernel_wire = use_kernels
     return AggregatorPipeline(
@@ -795,8 +1075,12 @@ def _build_probit_plus(
             use_kernels=kernel_wire,
             chunk=chunk,
             rand_bits=rand_bits,
+            wire_bits=wire_bits,
+            client_bits=client_bits,
         ),
-        server=ProBitPlusServer(use_kernels=kernel_wire, chunk=chunk),
+        server=ProBitPlusServer(
+            use_kernels=kernel_wire, chunk=chunk, wire_bits=wire_bits, dp=dp
+        ),
     )
 
 

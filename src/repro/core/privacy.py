@@ -44,12 +44,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .quantizer import binarize_prob
+from .quantizer import WIRE_BITS, binarize_prob, level_probs
 
 __all__ = [
     "DPConfig",
     "DELTA_SLACK",
     "dp_b_floor",
+    "rr_gamma",
     "privacy_loss",
     "basic_composition",
     "strong_composition",
@@ -97,8 +98,50 @@ def dp_b_floor(delta_abs_max: jax.Array, cfg: DPConfig) -> jax.Array:
     return delta_abs_max + margin
 
 
+def rr_gamma(
+    epsilon: float | jax.Array,
+    l1_sensitivity: float | jax.Array,
+    b: jax.Array,
+    bits: int,
+) -> jax.Array:
+    """Uniform-mixing weight of the L-level randomized-response wire.
+
+    The one-bit mechanism earns pure (eps, 0)-DP from the b-floor margin
+    alone; stochastic rounding onto ``L = 2**k > 2`` levels does *not* —
+    two adjacent updates can put probability 0 vs > 0 on the same level,
+    so the raw likelihood ratio diverges. The k-bit wire therefore mixes
+    in classical L-level randomized response: with probability ``gamma``
+    the emitted level is replaced by a uniform draw over all L levels
+    (whose grid mean is 0, so the server debias is a ``1/(1-gamma)``
+    rescale). Every outcome then has probability ``>= gamma/L`` and the
+    per-coordinate log-ratio is bounded by
+    ``(1-gamma)/(gamma/L) * |delta_a - delta_b| / step`` (the adjacent
+    -level probabilities are 1-Lipschitz in the grid position). Summing
+    under the l1-sensitivity budget ``||delta_a - delta_b||_1 <= Delta_1``
+    and solving ``(1-gamma)/gamma * L * Delta_1 / step = eps`` gives::
+
+        gamma = L * Delta_1 / (L * Delta_1 + eps * step),  step = 2b/(L-1)
+
+    which the tests certify empirically via :func:`privacy_loss`. The
+    (eps, 0) guarantee is per round exactly as at k = 1, so all four
+    ledger accountants compose unchanged.
+    """
+    if bits not in WIRE_BITS:
+        raise ValueError(f"bits must be one of {WIRE_BITS}, got {bits}")
+    n_levels = 1 << bits
+    b = jnp.asarray(b, jnp.float32)
+    step = 2.0 * b / (n_levels - 1)
+    num = n_levels * jnp.asarray(l1_sensitivity, jnp.float32)
+    return num / (num + jnp.asarray(epsilon, jnp.float32) * jnp.maximum(step, 1e-30))
+
+
 def privacy_loss(
-    delta_a: jax.Array, delta_b: jax.Array, b: jax.Array
+    delta_a: jax.Array,
+    delta_b: jax.Array,
+    b: jax.Array,
+    *,
+    bits: int = 1,
+    gamma: jax.Array | None = None,
 ) -> jax.Array:
     """Worst-case total log-likelihood ratio between two adjacent updates.
 
@@ -117,12 +160,35 @@ def privacy_loss(
     probability grid (see their definition), so every probability the
     compressor can actually realize strictly inside (0, 1) passes through
     untouched — interior losses are reported exactly, never shrunk.
+
+    ``bits > 1`` evaluates the k-bit wire's L-level mechanism instead: the
+    outcome distribution is the adjacent-level tent
+    (:func:`repro.core.quantizer.level_probs`), mixed with the uniform
+    level distribution when ``gamma`` (from :func:`rr_gamma`) is given —
+    the randomized-response wire, whose every outcome probability is
+    ``>= gamma/L`` and whose loss the mixing provably caps at eps. With
+    ``bits > 1`` and ``gamma=None`` the raw (non-private) rounding
+    distribution is measured under the same clamps; zero-probability
+    levels then report the finite ``ln(_P_MAX/_P_MIN)`` sentinel rather
+    than infinity.
     """
-    pa = jnp.clip(binarize_prob(delta_a, b), _P_MIN, _P_MAX)
-    pb = jnp.clip(binarize_prob(delta_b, b), _P_MIN, _P_MAX)
-    loss_plus = jnp.abs(jnp.log(pa) - jnp.log(pb))
-    loss_minus = jnp.abs(jnp.log1p(-pa) - jnp.log1p(-pb))
-    return jnp.sum(jnp.maximum(loss_plus, loss_minus))
+    if bits == 1 and gamma is None:
+        pa = jnp.clip(binarize_prob(delta_a, b), _P_MIN, _P_MAX)
+        pb = jnp.clip(binarize_prob(delta_b, b), _P_MIN, _P_MAX)
+        loss_plus = jnp.abs(jnp.log(pa) - jnp.log(pb))
+        loss_minus = jnp.abs(jnp.log1p(-pa) - jnp.log1p(-pb))
+        return jnp.sum(jnp.maximum(loss_plus, loss_minus))
+    qa = level_probs(delta_a, b, bits)  # (L,) + delta.shape
+    qb = level_probs(delta_b, b, bits)
+    if gamma is None:
+        pa = jnp.clip(qa, _P_MIN, _P_MAX)
+        pb = jnp.clip(qb, _P_MIN, _P_MAX)
+    else:
+        mix = jnp.asarray(gamma, jnp.float32) / (1 << bits)
+        pa = (1.0 - jnp.asarray(gamma, jnp.float32)) * qa + mix
+        pb = (1.0 - jnp.asarray(gamma, jnp.float32)) * qb + mix
+    llr = jnp.abs(jnp.log(pa) - jnp.log(pb))
+    return jnp.sum(jnp.max(llr, axis=0))
 
 
 def basic_composition(eps_per_round: float, rounds: int) -> float:

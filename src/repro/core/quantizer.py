@@ -1,4 +1,4 @@
-"""Stochastic one-bit compressor (paper Eq. 5) and bit packing.
+"""Stochastic k-bit compressor (paper Eq. 5 and its k-bit extension).
 
 The PRoBit+ client-side compressor maps a model difference ``delta`` and a
 public quantization-range vector ``b`` (with ``b_i >= max_m |delta_i^m|``)
@@ -9,6 +9,27 @@ to one bit per component::
 
 which is an unbiased one-bit estimate of ``delta_i / b_i``:
 ``E[c_i] * b_i = delta_i``.
+
+k-bit generalization (``wire_bits`` in {1, 2, 4})
+-------------------------------------------------
+Eq. 5 is the L = 2 case of stochastic rounding onto the uniform
+``L = 2**k``-level grid ``v_l = -b + l * 2b/(L-1)``: a clipped delta
+between grid neighbours ``v_l <= delta <= v_{l+1}`` emits level ``l+1``
+with probability ``(delta - v_l)/(v_{l+1} - v_l)`` and level ``l``
+otherwise — adjacent-level probabilities, still unbiased
+(``E[v_level] = delta``), with per-coordinate variance shrinking as
+``(2b/(L-1))^2``. Levels travel as ``k`` one-bit *planes* (plane ``p``
+carries bit ``p`` of each level index), each packed exactly like the
+one-bit wire, concatenated plane-major along the byte axis — so the
+packed-wire machinery below (chunked pack, popcount count reduction,
+count streaming) consumes a k-bit wire unchanged: the flattened counts of
+a ``(M, k * d_pad/8)`` wire *are* the per-plane vote counts, the
+sufficient statistic of the (L, d) level histogram's mean. The k=1 wire
+is produced by the original one-bit path (:func:`packed_binarize_batch`)
+and stays bit-exact with it; k > 1 goes through
+:func:`packed_quantize_batch` with the **same** counter-derived
+``client_uniforms`` draw schedule. Pad coordinates carry deterministic 0
+bits in every plane.
 
 All functions are pure-JAX and shape-polymorphic; the Pallas-accelerated
 versions live in :mod:`repro.kernels` and are validated against these.
@@ -28,14 +49,55 @@ __all__ = [
     "codes_to_counts",
     "byte_popcount",
     "PACK_CHUNK",
+    "WIRE_BITS",
+    "wire_bytes",
     "padded_dim",
     "client_uniforms",
+    "level_positions",
+    "level_probs",
+    "quantize_levels",
+    "dequantize_levels",
+    "pack_levels",
+    "unpack_levels",
     "packed_binarize_batch",
+    "packed_quantize_batch",
     "packed_sign_batch",
     "packed_counts",
     "packed_weighted_counts",
     "packed_residuals",
 ]
+
+# Supported per-value wire widths. 8/k must divide evenly into bytes and
+# the (L-1)-level grid must stay addressable in uint8 planes; {1, 2, 4}
+# covers the Two-Bit Aggregation and HeteroSAg operating points.
+WIRE_BITS = (1, 2, 4)
+
+
+def wire_bytes(
+    d: int, bits: int = 1, *, topk_frac: float = 1.0, d_pad: int | None = None
+) -> int:
+    """Uplink bytes of ONE client's packed wire row — the single place the
+    coordinates x bits -> bytes arithmetic lives.
+
+    Every byte-accounting call site (compressor row width, campaign
+    ``peak_bytes_est``, pytree wire report, kernel microbenchmark uplink
+    ratios) routes through here so the accounting can never drift from
+    the actual wire layout.
+
+    ``d_pad`` is the padded coordinate count the producing wire actually
+    emits (``padded_dim(d, chunk)`` for the chunked packer,
+    ``kernels.ops.padded_len(d)`` for the kernel wire); ``None`` gives the
+    unpadded ``ceil(d/8)`` ideal floor. ``topk_frac < 1`` prices the
+    sparse wire: int32 indices + packed codes for ``k = max(d*frac, 1)``
+    coordinates.
+    """
+    if bits not in WIRE_BITS:
+        raise ValueError(f"bits must be one of {WIRE_BITS}, got {bits}")
+    if topk_frac < 1.0:
+        k = max(int(d * topk_frac), 1)
+        return 4 * k + bits * ((k + 7) // 8)
+    n = d if d_pad is None else d_pad
+    return bits * ((n + 7) // 8)
 
 
 def binarize_prob(delta: jax.Array, b: jax.Array) -> jax.Array:
@@ -150,6 +212,102 @@ def client_uniforms(
     return u.reshape(-1)[:n]
 
 
+# ---------------------------------------------------------------------------
+# k-bit grid primitives (Eq. 5 generalized to adjacent-level probabilities)
+# ---------------------------------------------------------------------------
+
+def level_positions(delta: jax.Array, b: jax.Array, bits: int) -> jax.Array:
+    """Continuous grid position ``x in [0, L-1]`` of a clipped delta.
+
+    ``x = (clip(delta, -b, b) + b) / step`` with ``step = 2b/(L-1)``; the
+    emitted level is ``floor(x)`` or ``floor(x)+1`` with adjacent-level
+    probabilities ``1-frac(x)`` / ``frac(x)``. Dead coordinates
+    (``b == 0``) sit at the grid midpoint ``(L-1)/2`` so the dequantized
+    mean stays 0 — the k-bit analogue of Eq. 5's ``p = 1/2`` guard.
+    """
+    levels = (1 << bits) - 1
+    b = jnp.broadcast_to(b, delta.shape).astype(jnp.float32)
+    delta = jnp.clip(delta.astype(jnp.float32), -b, b)
+    safe_step = jnp.where(b > 0, 2.0 * b / levels, 1.0)
+    x = (delta + b) / safe_step
+    return jnp.where(b > 0, x, 0.5 * levels)
+
+
+def level_probs(delta: jax.Array, b: jax.Array, bits: int) -> jax.Array:
+    """Per-level emission probabilities ``(L,) + delta.shape``.
+
+    The adjacent-level rule is the tent function
+    ``q_l = max(0, 1 - |x - l|)`` of the grid position ``x`` — at most two
+    nonzero entries per coordinate, summing to 1. Used by the privacy
+    module to evaluate the L-level randomized-response likelihood ratio.
+    """
+    x = level_positions(delta, b, bits)
+    lvls = jnp.arange(1 << bits, dtype=jnp.float32)
+    lvls = lvls.reshape((-1,) + (1,) * x.ndim)
+    return jnp.clip(1.0 - jnp.abs(x[None] - lvls), 0.0, 1.0)
+
+
+def quantize_levels(
+    u: jax.Array, delta: jax.Array, b: jax.Array, bits: int
+) -> jax.Array:
+    """Stochastic grid rounding: uniforms + deltas -> uint8 level indices.
+
+    ``u`` follows the same counter-derived :func:`client_uniforms`
+    schedule as the one-bit wire; level = ``low + 1[u < frac]`` where
+    ``low/frac`` split the grid position. Unbiased:
+    ``E[dequantize_levels(level)] = clip(delta, -b, b)``.
+    """
+    levels = (1 << bits) - 1
+    x = level_positions(delta, b, bits)
+    low = jnp.clip(jnp.floor(x), 0.0, float(levels - 1))
+    frac = x - low
+    return (low + (u < frac)).astype(jnp.uint8)
+
+
+def dequantize_levels(levels: jax.Array, b: jax.Array, bits: int) -> jax.Array:
+    """Grid value of a level index: ``v_l = -b + l * 2b/(L-1)``."""
+    n_steps = (1 << bits) - 1
+    b = b.astype(jnp.float32)
+    return -b + levels.astype(jnp.float32) * (2.0 * b / n_steps)
+
+
+def pack_levels(levels: jax.Array, bits: int) -> jax.Array:
+    """(..., n) uint8 level indices -> (..., bits * ceil(n/8)) packed planes.
+
+    Bit-plane order: plane ``p`` (bit ``p`` of each level index, LSB
+    first) is packed exactly like the one-bit wire and the planes are
+    concatenated along the byte axis — plane-major, each plane
+    byte-major/LSB-first internally. ``n % 8 != 0`` tails pad each plane
+    with 0 bits (level 0), which :func:`unpack_levels` slices away. At
+    ``bits=1`` the layout *is* the one-bit wire's.
+    """
+    if bits not in WIRE_BITS:
+        raise ValueError(f"bits must be one of {WIRE_BITS}, got {bits}")
+    n = levels.shape[-1]
+    pad = (-n) % 8
+    levels = jnp.pad(
+        levels.astype(jnp.uint8), [(0, 0)] * (levels.ndim - 1) + [(0, pad)]
+    )
+    planes = [
+        _pack_bool_lastdim((levels >> p) & jnp.uint8(1)) for p in range(bits)
+    ]
+    return jnp.concatenate(planes, axis=-1)
+
+
+def unpack_levels(packed: jax.Array, n: int, bits: int) -> jax.Array:
+    """Inverse of :func:`pack_levels`: packed planes -> (..., n) uint8."""
+    plane_bytes = packed.shape[-1] // bits
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    out = jnp.zeros(packed.shape[:-1] + (plane_bytes * 8,), jnp.uint8)
+    for p in range(bits):
+        plane = packed[..., p * plane_bytes : (p + 1) * plane_bytes]
+        pbits = (plane[..., None] >> shifts) & jnp.uint8(1)
+        out = out | (
+            pbits.reshape(packed.shape[:-1] + (plane_bytes * 8,)) << p
+        )
+    return out[..., :n]
+
+
 def _pack_bool_lastdim(bits: jax.Array) -> jax.Array:
     """(..., 8k) bool -> (..., k) uint8, LSB-first within each byte."""
     shape = bits.shape[:-1] + (bits.shape[-1] // 8, 8)
@@ -241,6 +399,99 @@ def packed_binarize_batch(
 
     packed_c, res_c = jax.lax.map(one_chunk, jnp.arange(n_chunks))
     packed = jnp.moveaxis(packed_c, 0, 1).reshape(m, d_pad // 8)
+    if want_residual:
+        res = jnp.moveaxis(res_c, 0, 1).reshape(m, d_pad)[:, :d]
+        return packed, res
+    return packed, None
+
+
+def packed_quantize_batch(
+    key: jax.Array,
+    deltas: jax.Array,
+    b: jax.Array,
+    *,
+    bits: int,
+    chunk: int = PACK_CHUNK,
+    want_residual: bool = False,
+    row_offset: jax.Array | int = 0,
+    gamma: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Chunked k-bit quantize + plane-pack: (M, d) f32 -> (M, k*d_pad/8).
+
+    The k > 1 counterpart of :func:`packed_binarize_batch` (which remains
+    the one-bit wire, bit-exact with pre-k-bit history): same
+    counter-derived schedule — the *rounding* uniform of coordinate chunk
+    ``j`` of client ``m`` comes from ``fold_in(fold_in(key, row_offset +
+    m), j)``, exactly the :func:`client_uniforms` draws — so dense,
+    client-chunked, and kernel-dispatched compressions emit identical
+    wires. Output layout: ``bits`` one-bit planes, plane-major over the
+    full padded row (plane ``p`` occupies bytes ``[p*d_pad/8,
+    (p+1)*d_pad/8)``), each plane internally in the one-bit wire's
+    chunk/byte/LSB order.
+
+    ``gamma`` (None, scalar, or per-coordinate ``(d,)``) arms the L-level
+    randomized-response mixing that carries the (eps, 0)-DP guarantee at
+    k > 1 (see :func:`repro.core.privacy.rr_gamma`): with probability
+    ``gamma`` the emitted level is replaced by a uniform one. The RR gate
+    and replacement level draw from ``fold_in(kj, 1)`` / ``fold_in(kj,
+    2)`` of the chunk key — still counter-derived, so the DP wire too is
+    reproducible across chunkings. Pad coordinates get ``gamma = 0`` and
+    therefore keep their deterministic 0 bits in every plane.
+
+    With ``want_residual`` the EF residual ``delta - v(level)`` (the
+    *emitted* level, RR flips included) is returned alongside.
+    """
+    if bits not in WIRE_BITS:
+        raise ValueError(f"bits must be one of {WIRE_BITS}, got {bits}")
+    if bits == 1 and gamma is None:
+        return packed_binarize_batch(
+            key, deltas, b, chunk=chunk, want_residual=want_residual,
+            row_offset=row_offset,
+        )
+    n_levels = 1 << bits
+    m, d = deltas.shape
+    deltas_p, b_full, d_pad = _pad_batch(deltas, b, chunk)
+    gamma_full = None
+    if gamma is not None:
+        gamma_full = jnp.pad(
+            jnp.broadcast_to(gamma, (d,)).astype(jnp.float32), (0, d_pad - d)
+        )
+    n_chunks = d_pad // chunk
+    client_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        row_offset + jnp.arange(m)
+    )
+
+    def one_chunk(j):
+        dch = jax.lax.dynamic_slice_in_dim(deltas_p, j * chunk, chunk, axis=1)
+        bch = jax.lax.dynamic_slice_in_dim(b_full, j * chunk, chunk, axis=0)
+        gch = (
+            None
+            if gamma_full is None
+            else jax.lax.dynamic_slice_in_dim(gamma_full, j * chunk, chunk, 0)
+        )
+
+        def per_client(ck, drow):
+            kj = jax.random.fold_in(ck, j)
+            u = jax.random.uniform(kj, (chunk,), dtype=jnp.float32)
+            lvl = quantize_levels(u, drow, bch, bits)
+            if gch is not None:
+                gate = jax.random.uniform(
+                    jax.random.fold_in(kj, 1), (chunk,), dtype=jnp.float32
+                )
+                rand_lvl = jax.random.randint(
+                    jax.random.fold_in(kj, 2), (chunk,), 0, n_levels, jnp.uint8
+                )
+                lvl = jnp.where(gate < gch, rand_lvl, lvl)
+            packed = pack_levels(lvl, bits).reshape(bits, chunk // 8)
+            if want_residual:
+                return packed, drow - dequantize_levels(lvl, bch, bits)
+            return packed, jnp.zeros((), jnp.float32)
+
+        return jax.vmap(per_client)(client_keys, dch)
+
+    packed_c, res_c = jax.lax.map(one_chunk, jnp.arange(n_chunks))
+    # (n_chunks, M, bits, chunk/8) -> (M, bits, n_chunks, chunk/8)
+    packed = jnp.moveaxis(packed_c, 0, 2).reshape(m, bits * d_pad // 8)
     if want_residual:
         res = jnp.moveaxis(res_c, 0, 1).reshape(m, d_pad)[:, :d]
         return packed, res

@@ -13,9 +13,10 @@ Wire format (what travels, per layer)
 Each leaf ``l`` (``jax.tree_util.tree_flatten`` order) is flattened to
 ``(M, d_l)`` and compressed independently into the canonical
 :class:`~repro.core.aggregation.PackedWire`: an
-``(M, padded_dim(d_l)/8)`` uint8 matrix of LSB-first packed one-bit codes
-plus the public range vector ``b`` — 1 bit per parameter per client on
-the uplink (the top-k variant ships a
+``(M, wire_bits * padded_dim(d_l)/8)`` uint8 matrix of LSB-first packed
+codes (``wire_bits`` plane-major one-bit planes; 1 at the paper's wire)
+plus the public range vector ``b`` — ``wire_bits`` bits per parameter per
+client on the uplink (the top-k variant ships a
 :class:`~repro.core.aggregation.SparseWire` of per-client index sets +
 packed codes instead). Leaves are never concatenated: resident memory is
 O(M * d_l / 8) per layer for the one-shot path and O(C * d_l / 8) for the
@@ -61,6 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.aggregation import AggregatorPipeline, Wire
+from ..core.quantizer import wire_bytes as _wire_row_bytes
 
 __all__ = [
     "PytreeWireState",
@@ -113,17 +115,19 @@ def pytree_wire_bytes(
     (FedAvg) pipelines ship f32 for every leaf.
     """
     comp = pipeline.compressor
+    bits = getattr(comp, "wire_bits", 1)
     packed = ideal = dim = 0
     for leaf in jax.tree.leaves(params):
         d = int(leaf.size)
         wb = comp.wire_bytes(d)
         if comp.mode != "dense" and comp.topk_frac < 1.0:
-            k = max(int(d * comp.topk_frac), 1)
-            packed += 4 * k + (k + 7) // 8  # int32 indices + packed codes
-            ideal += 4 * k + (k + 7) // 8
+            # int32 indices + packed codes; no padding on the sparse wire
+            sparse = _wire_row_bytes(d, bits, topk_frac=comp.topk_frac)
+            packed += sparse
+            ideal += sparse
         else:
             packed += wb if wb is not None else 4 * d
-            ideal += (d + 7) // 8 if wb is not None else 4 * d
+            ideal += _wire_row_bytes(d, bits) if wb is not None else 4 * d
         dim += d
     return {
         "wire_bytes": m * packed,
@@ -224,6 +228,11 @@ def stream_aggregate_pytree(
         )
     if comp.topk_frac < 1.0:
         raise ValueError("top-k sparse wires cannot count-stream")
+    if getattr(comp, "client_bits", None) is not None:
+        raise ValueError(
+            "per-client bit-widths emit a per-group HeteroWire and cannot "
+            "fold through the flat count accumulator; use aggregate_pytree"
+        )
     leaves, treedef = jax.tree_util.tree_flatten(deltas)
     res_leaves = jax.tree.leaves(state.residuals)
     m = leaves[0].shape[0]

@@ -127,6 +127,19 @@ class FLConfig:
     # Shard the client axis of each chunk scan across the campaign mesh
     # (launch/mesh.make_campaign_mesh) via the weighted-count reduction.
     stream_shard: bool = False
+    # Wire width k in {1, 2, 4} bits/parameter (probit_plus only). 1 is
+    # the paper's one-bit wire, bit-exact with pre-k-bit history; k > 1
+    # stochastically quantizes onto the uniform 2**k-level grid and, under
+    # DP, mixes in L-level randomized response (core.privacy.rr_gamma) so
+    # the per-round (eps, 0) guarantee — and all four accountants —
+    # compose unchanged.
+    wire_bits: int = 1
+    # BEYOND-PAPER: HeteroSAg-style per-client bit-widths — one entry per
+    # cohort row, each in {1, 2, 4}. Overrides wire_bits; the server
+    # aggregates per equal-bits group and MLE-merges. Restricted to the
+    # dense synchronous probit_plus wire (no kernels / top-k / streaming /
+    # async).
+    client_bits: tuple | None = None
     seed: int = 0
 
     def __post_init__(self):
@@ -238,6 +251,77 @@ class FLConfig:
                     "error feedback carries a per-client residual across "
                     "rounds and contradicts stateless_clients"
                 )
+        from ..core.quantizer import WIRE_BITS
+
+        if self.wire_bits not in WIRE_BITS:
+            raise ValueError(
+                f"wire_bits must be one of {WIRE_BITS}, got {self.wire_bits}"
+            )
+        if self.wire_bits != 1:
+            if self.aggregator != "probit_plus":
+                raise ValueError(
+                    f"wire_bits={self.wire_bits} is only supported by the "
+                    f"probit_plus wire, not {self.aggregator!r} (the k-bit "
+                    "level protocol is PRoBit+'s count/MLE machinery)"
+                )
+            if self.topk_frac < 1.0:
+                raise ValueError(
+                    "wire_bits > 1 is not supported on the top-k wire "
+                    "(SparseWire packs one bit per surviving coordinate); "
+                    "set topk_frac=1.0"
+                )
+        if self.client_bits is not None:
+            object.__setattr__(
+                self, "client_bits", tuple(int(k) for k in self.client_bits)
+            )
+            for k in self.client_bits:
+                if k not in WIRE_BITS:
+                    raise ValueError(
+                        f"client_bits entries must be in {WIRE_BITS}, got {k}"
+                    )
+            if self.aggregator != "probit_plus":
+                raise ValueError(
+                    "per-client bit-widths (client_bits) are only supported "
+                    f"by probit_plus, not {self.aggregator!r}"
+                )
+            if len(self.client_bits) != self.n_active:
+                raise ValueError(
+                    f"client_bits needs one entry per cohort row: got "
+                    f"{len(self.client_bits)} for a {self.n_active}-client "
+                    "cohort"
+                )
+            if self.use_kernels:
+                raise ValueError(
+                    "client_bits is not supported on the kernel wire yet; "
+                    "unset use_kernels (homogeneous wire_bits works with "
+                    "kernels)"
+                )
+            if self.topk_frac < 1.0:
+                raise ValueError(
+                    "client_bits is not supported on the top-k wire; "
+                    "set topk_frac=1.0"
+                )
+            if self.client_chunk or self.stream_shard:
+                raise ValueError(
+                    "client_bits emits a per-group HeteroWire and cannot "
+                    "stream through the flat count accumulator; unset "
+                    "client_chunk/stream_shard"
+                )
+            if self.async_buffer:
+                raise ValueError(
+                    "client_bits rows have heterogeneous wire widths and "
+                    "cannot share the fixed-width async buffer; set "
+                    "async_buffer=0"
+                )
+            if self.byz_frac > 0:
+                from ..core import is_wire_attack
+
+                if is_wire_attack(self.attack):
+                    raise ValueError(
+                        f"wire attack {self.attack!r} is not supported on "
+                        "the heterogeneous wire yet; use a delta-level "
+                        "attack or homogeneous wire_bits"
+                    )
         if self.stream_shard:
             if not self.client_chunk:
                 raise ValueError("stream_shard requires client_chunk > 0")
@@ -313,6 +397,8 @@ class FLConfig:
             gm_iters=self.gm_iters,
             use_kernels=self.use_kernels,
             chunk=self.pack_chunk or PACK_CHUNK,
+            wire_bits=self.wire_bits,
+            client_bits=self.client_bits,
         )
 
 

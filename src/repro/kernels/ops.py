@@ -41,6 +41,7 @@ from ..core.quantizer import (
     client_uniforms,
     packed_binarize_batch,
     packed_counts,
+    packed_quantize_batch,
 )
 from .stoch_quant import LANES, stoch_quant_ef_2d, stoch_quant_pack_2d
 from .bit_aggregate import bit_aggregate_2d
@@ -179,7 +180,8 @@ def stoch_quant_pack(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("chunk", "want_residual", "engine", "interpret")
+    jax.jit,
+    static_argnames=("chunk", "want_residual", "engine", "interpret", "bits"),
 )
 def stoch_quant_compress_batch(
     key: jax.Array,
@@ -191,6 +193,8 @@ def stoch_quant_compress_batch(
     want_residual: bool = False,
     engine: str | None = None,
     interpret: bool | None = None,
+    bits: int = 1,
+    gamma: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array | None]:
     """Batch compress of an (M, d) cohort to the kernel-aligned wire.
 
@@ -205,11 +209,37 @@ def stoch_quant_compress_batch(
     the kernel wire width ``padded_len(d)/8`` (both pads are deterministic
     0 bits); pallas/interpret vmap the fused kernel over clients.
 
-    Returns (packed (M, padded_len(d)/8) uint8, residuals (M, d) or None).
+    ``bits > 1`` emits the plane-major k-bit wire
+    (:func:`repro.core.quantizer.packed_quantize_batch`, optionally
+    randomized-response-mixed via ``gamma``), each plane realigned to the
+    kernel width — (M, bits * padded_len(d)/8). There is no Mosaic k-bit
+    kernel yet, so every backend routes k > 1 through the ref engine
+    (interpret mode, being strictly a lowering test for the one-bit
+    kernel, rejects it).
+
+    Returns (packed (M, bits * padded_len(d)/8) uint8, residuals (M, d)
+    or None).
     """
     engine = _engine_arg(engine, interpret)
     m, d = deltas.shape
     target = padded_len(d) // 8
+    if bits > 1:
+        if engine == "interpret":
+            raise NotImplementedError(
+                "bits > 1 has no Pallas lowering; interpret mode only "
+                "emulates existing kernels (use engine='ref')"
+            )
+        packed, res = packed_quantize_batch(
+            key, deltas, b, bits=bits, chunk=chunk,
+            want_residual=want_residual, row_offset=row_offset, gamma=gamma,
+        )
+        src = packed.shape[1] // bits
+        planes = packed.reshape(m, bits, src)
+        if src > target:
+            planes = planes[:, :, :target]
+        elif src < target:
+            planes = jnp.pad(planes, ((0, 0), (0, 0), (0, target - src)))
+        return planes.reshape(m, bits * target), res
     if engine == "ref":
         packed, res = packed_binarize_batch(
             key, deltas, b, chunk=chunk, want_residual=want_residual,

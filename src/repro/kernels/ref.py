@@ -89,6 +89,72 @@ def bit_aggregate_ref(packed: jax.Array, b: jax.Array) -> jax.Array:
     return (2.0 * counts.astype(jnp.float32) - m) / m * b.astype(jnp.float32)
 
 
+def kbit_quant_compress_ref(
+    delta: jax.Array,
+    b: jax.Array,
+    uniforms: jax.Array,
+    *,
+    bits: int,
+    residual: jax.Array | None = None,
+    want_residual: bool = False,
+) -> tuple[jax.Array, jax.Array | None]:
+    """k-bit sibling of :func:`stoch_quant_compress_ref` (one client).
+
+    Stochastic-rounds onto the uniform ``2**bits``-level grid in [-b, b]
+    and packs the level index as ``bits`` one-bit planes (plane-major,
+    each plane the exact one-bit pack) — see
+    :func:`repro.core.quantizer.quantize_levels` /
+    :func:`repro.core.quantizer.pack_levels`. ``bits=1`` reproduces the
+    one-bit ref wire byte-for-byte (level 1 == code +1, plane 0 == the
+    sign-bit plane).
+
+    Args:
+      delta: (N,) float, N divisible by 8.
+      b: (N,) float public range.
+      uniforms: (N,) float32 in [0, 1) — the rounding draws.
+      residual: optional EF carry added to delta first.
+      want_residual: also return ``eff - dequantize(level)``.
+    Returns:
+      ((bits * N // 8,) uint8 packed planes, (N,) f32 residual or None).
+    """
+    from ..core.quantizer import dequantize_levels, pack_levels, quantize_levels
+
+    eff = delta.astype(jnp.float32)
+    if residual is not None:
+        eff = eff + residual.astype(jnp.float32)
+    b = jnp.broadcast_to(b, eff.shape).astype(jnp.float32)
+    levels = quantize_levels(uniforms, eff, b, bits)
+    packed = pack_levels(levels, bits)
+    if not want_residual:
+        return packed, None
+    return packed, eff - dequantize_levels(levels, b, bits)
+
+
+def kbit_aggregate_ref(packed: jax.Array, b: jax.Array, bits: int) -> jax.Array:
+    """Popcount-count each bit plane, then the L-level ML estimate.
+
+    The plane-major wire keeps the octet-transpose popcount reduction
+    (:func:`repro.core.quantizer.packed_counts`) valid verbatim: the flat
+    count of an ``(M, bits * P)`` wire *is* the per-plane vote count laid
+    out plane-major, and ``sum_p 2**p N_p`` is the level-histogram mean
+    the estimate needs.
+
+    Args:
+      packed: (M, bits * P) uint8, P = N // 8.
+      b: (N,) float32.
+    Returns:
+      (N,) float32 — :func:`repro.core.aggregation.kbit_estimate_from_counts`.
+    """
+    from ..core.aggregation import kbit_estimate_from_counts
+    from ..core.quantizer import packed_counts
+
+    m = packed.shape[0]
+    n = b.shape[0]
+    flat = packed_counts(packed)
+    plane_counts = flat.reshape(bits, -1)[:, :n]
+    return kbit_estimate_from_counts(plane_counts, m, b, bits)
+
+
 def prox_sgd_ref(
     w: jax.Array,
     w0: jax.Array,

@@ -1,0 +1,536 @@
+"""k-bit wire tests (PR 9): pack/unpack, L-level MLE, cross-path parity,
+randomized-response DP, heterogeneous groups — and the pinned k=1 golden
+regression that freezes the paper's one-bit wire byte-for-byte.
+
+Golden vectors: ``tests/data/k1_golden.npz`` was captured at the
+pre-refactor HEAD by ``tools/capture_k1_golden.py``. Packed bytes and
+integer counts must match *exactly*; theta / EF residuals match to the
+jit-reassociation tolerance (1e-6, the PR-3 precedent).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DPConfig,
+    HeteroWire,
+    build_pipeline,
+    hetero_client_groups,
+    kbit_estimate_from_counts,
+    privacy_loss,
+    rr_gamma,
+)
+from repro.core.quantizer import (
+    WIRE_BITS,
+    dequantize_levels,
+    pack_levels,
+    packed_counts,
+    packed_quantize_batch,
+    quantize_levels,
+    unpack_levels,
+    wire_bytes,
+)
+from repro.fl.runtime import FLConfig
+from repro.kernels import ops as kops
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "k1_golden.npz")
+
+# The golden capture's exact scenario (tools/capture_k1_golden.py).
+M, D, CHUNK, CLIENT_CHUNK = 12, 50, 64, 4
+B_SCALAR = 0.4
+SEED = 7
+
+
+def _golden_deltas():
+    k = jax.random.PRNGKey(1234)
+    return 0.1 * jax.random.normal(k, (M, D), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# k-bit primitives
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", WIRE_BITS)
+@pytest.mark.parametrize("n", [8, 16, 13, 1, 37])  # incl. n % 8 != 0 tails
+def test_pack_unpack_roundtrip(bits, n):
+    key = jax.random.PRNGKey(bits * 100 + n)
+    levels = jax.random.randint(key, (3, n), 0, 1 << bits).astype(jnp.uint8)
+    packed = pack_levels(levels, bits)
+    assert packed.shape[-1] == bits * ((n + 7) // 8)
+    out = unpack_levels(packed, n, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(levels))
+
+
+@pytest.mark.parametrize("bits", WIRE_BITS)
+def test_quantize_levels_valid_and_unbiased(bits):
+    """Levels are in [0, L-1]; stochastic rounding is unbiased in the
+    uniforms (empirical mean of dequantized levels -> delta)."""
+    d = 64
+    delta = jnp.linspace(-0.29, 0.29, d)
+    b = jnp.full((d,), 0.3)
+    reps = 4000
+    keys = jax.random.split(jax.random.PRNGKey(0), reps)
+    us = jax.vmap(lambda k: jax.random.uniform(k, (d,)))(keys)
+    lvls = jax.vmap(lambda u: quantize_levels(u, delta, b, bits))(us)
+    assert int(jnp.min(lvls)) >= 0 and int(jnp.max(lvls)) <= (1 << bits) - 1
+    vals = jax.vmap(lambda l: dequantize_levels(l, b, bits))(lvls)
+    # std of the mean ~ step / (2 sqrt(reps)); 5 sigma margin
+    step = 2 * 0.3 / ((1 << bits) - 1)
+    tol = 5 * step / (2 * np.sqrt(reps)) + 1e-6
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(vals, axis=0)), np.asarray(delta), atol=tol
+    )
+
+
+def test_kbit_wire_bytes_helper():
+    """wire_bytes is the one source of byte accounting for every caller."""
+    assert wire_bytes(64, 1) == 8
+    assert wire_bytes(64, 2) == 16
+    assert wire_bytes(64, 4) == 32
+    assert wire_bytes(50, 1) == 7  # ceil(50/8)
+    assert wire_bytes(50, 2) == 14  # 2 planes of 7
+    assert wire_bytes(50, 1, d_pad=64) == 8  # padded wire row
+    assert wire_bytes(100, 1, topk_frac=0.1) == 4 * 10 + 2  # idx + codes
+    with pytest.raises(ValueError):
+        wire_bytes(64, 3)
+
+
+@pytest.mark.parametrize("bits", WIRE_BITS)
+def test_kbit_estimate_bounded_and_monotone(bits):
+    """The L-level MLE stays inside [-b, b] and is non-decreasing in
+    every plane count (all plane weights are positive)."""
+    d = 9
+    m = 20
+    b = jnp.full((d,), 0.5)
+    key = jax.random.PRNGKey(1)
+    counts = jax.random.randint(key, (bits, d), 0, m + 1)
+    est = kbit_estimate_from_counts(counts, m, b, bits)
+    assert bool(jnp.all(jnp.abs(est) <= 0.5 + 1e-6))
+    for p in range(bits):
+        bumped = counts.at[p, 0].add(1)
+        est2 = kbit_estimate_from_counts(bumped, m, b, bits)
+        assert float(est2[0]) >= float(est[0]) - 1e-7
+        np.testing.assert_array_equal(
+            np.asarray(est2[1:]), np.asarray(est[1:])
+        )
+
+
+def test_kbit_estimate_reduces_to_eq13_at_k1():
+    m = 16
+    b = jnp.full((5,), 0.3)
+    counts = jnp.array([[0, 4, 8, 12, 16]], jnp.int32)
+    from repro.core import ml_estimate_from_counts
+
+    np.testing.assert_allclose(
+        np.asarray(kbit_estimate_from_counts(counts, m, b, 1)),
+        np.asarray(ml_estimate_from_counts(counts[0], m, b)),
+        atol=1e-7,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cross-path bit-exactness at k in {2, 4}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_kbit_chunked_equals_dense_equals_kernel(bits):
+    """dense == chunked-streaming == kernel-ref at k > 1: same plane
+    bytes, same counts, same theta — the counter-derived uniform schedule
+    depends only on absolute cohort position."""
+    key = jax.random.PRNGKey(SEED)
+    deltas = _golden_deltas()
+    res0 = jnp.zeros((M, D), jnp.float32)
+
+    pipe = build_pipeline("probit_plus", wire_bits=bits, chunk=CHUNK)
+    wire, _ = pipe.compress_wire(key, deltas, B_SCALAR, res0)
+    assert wire.bits == bits
+    assert wire.packed.shape == (M, wire_bytes(D, bits, d_pad=64))
+    theta_dense = pipe.estimate(wire)
+
+    # chunked-streaming (uneven split exercises row_offset rebasing)
+    comp, server = pipe.compressor, pipe.server
+    counts = server.init_counts(comp.wire_bytes(D))
+    packed_rows = []
+    for g0 in range(0, M, CLIENT_CHUNK):
+        w_ch, _ = comp.compress(
+            key, deltas[g0 : g0 + CLIENT_CHUNK], B_SCALAR,
+            res0[g0 : g0 + CLIENT_CHUNK], row_offset=g0,
+        )
+        packed_rows.append(np.asarray(w_ch.packed))
+        counts = server.accumulate_counts(counts, w_ch.packed)
+    np.testing.assert_array_equal(
+        np.concatenate(packed_rows, axis=0), np.asarray(wire.packed)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(counts), np.asarray(packed_counts(wire.packed))
+    )
+    theta_stream = server.finalize(counts, M, comp.b_vector(D, B_SCALAR))
+    np.testing.assert_array_equal(
+        np.asarray(theta_stream), np.asarray(theta_dense)
+    )
+
+    # kernel-ref engine: same planes modulo lane realignment
+    kpipe = build_pipeline(
+        "probit_plus", wire_bits=bits, use_kernels=True, chunk=CHUNK
+    )
+    kwire, _ = kpipe.compress_wire(key, deltas, B_SCALAR, res0)
+    src = wire.packed.shape[1] // bits
+    tgt = kwire.packed.shape[1] // bits
+    keep = min(src, tgt)
+    np.testing.assert_array_equal(
+        np.asarray(wire.packed).reshape(M, bits, src)[:, :, :keep],
+        np.asarray(kwire.packed).reshape(M, bits, tgt)[:, :, :keep],
+    )
+    np.testing.assert_allclose(
+        np.asarray(kpipe.estimate(kwire)), np.asarray(theta_dense), atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_kbit_ref_engine_functions(bits):
+    """kernels.ref k-bit engine == the quantizer primitives, one client."""
+    from repro.kernels.ref import kbit_aggregate_ref, kbit_quant_compress_ref
+
+    n = 32
+    key = jax.random.PRNGKey(5)
+    delta = 0.1 * jax.random.normal(key, (n,))
+    b = jnp.full((n,), 0.2)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    packed, res = kbit_quant_compress_ref(
+        delta, b, u, bits=bits, want_residual=True
+    )
+    lvls = quantize_levels(u, delta, b, bits)
+    np.testing.assert_array_equal(
+        np.asarray(packed), np.asarray(pack_levels(lvls, bits))
+    )
+    np.testing.assert_allclose(
+        np.asarray(res),
+        np.asarray(delta - dequantize_levels(lvls, b, bits)),
+        atol=1e-7,
+    )
+    theta = kbit_aggregate_ref(packed[None, :], b, bits)
+    np.testing.assert_allclose(
+        np.asarray(theta),
+        np.asarray(dequantize_levels(lvls, b, bits)),
+        atol=1e-6,
+    )
+
+
+def test_kbit_interpret_engine_rejected():
+    key = jax.random.PRNGKey(0)
+    deltas = jnp.zeros((2, 16))
+    with pytest.raises(NotImplementedError):
+        kops.stoch_quant_compress_batch(
+            key, deltas, jnp.float32(0.1), bits=2, engine="interpret"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pinned k=1 regression vs pre-refactor golden vectors
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+def test_k1_golden_dense(golden):
+    key = jax.random.PRNGKey(SEED)
+    deltas = _golden_deltas()
+    res0 = jnp.zeros((M, D), jnp.float32)
+    pipe = build_pipeline("probit_plus", error_feedback=True, chunk=CHUNK)
+    wire, res = pipe.compress_wire(key, deltas, B_SCALAR, res0)
+    np.testing.assert_array_equal(
+        np.asarray(wire.packed), golden["dense_packed"]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(packed_counts(wire.packed)), golden["dense_counts"]
+    )
+    np.testing.assert_allclose(
+        np.asarray(wire.b), golden["dense_b"], atol=1e-7
+    )
+    np.testing.assert_allclose(
+        np.asarray(pipe.estimate(wire)), golden["dense_theta"], atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(res), golden["dense_residuals"], atol=1e-6
+    )
+
+
+def test_k1_golden_chunked_streaming(golden):
+    key = jax.random.PRNGKey(SEED)
+    deltas = _golden_deltas()
+    res0 = jnp.zeros((M, D), jnp.float32)
+    pipe = build_pipeline("probit_plus", error_feedback=True, chunk=CHUNK)
+    comp, server = pipe.compressor, pipe.server
+    b_vec = comp.b_vector(D, B_SCALAR)
+    counts = server.init_counts(comp.wire_bytes(D))
+    res_stream = np.zeros((M, D), np.float32)
+    for g0 in range(0, M, CLIENT_CHUNK):
+        w_ch, r_ch = comp.compress(
+            key, deltas[g0 : g0 + CLIENT_CHUNK], B_SCALAR,
+            res0[g0 : g0 + CLIENT_CHUNK], row_offset=g0,
+        )
+        counts = server.accumulate_counts(counts, w_ch.packed)
+        res_stream[g0 : g0 + CLIENT_CHUNK] = np.asarray(r_ch)
+    np.testing.assert_array_equal(np.asarray(counts), golden["stream_counts"])
+    np.testing.assert_allclose(
+        np.asarray(server.finalize(counts, M, b_vec)),
+        golden["stream_theta"],
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        res_stream, golden["stream_residuals"], atol=1e-6
+    )
+
+
+def test_k1_golden_kernel_ref(golden):
+    key = jax.random.PRNGKey(SEED)
+    deltas = _golden_deltas()
+    res0 = jnp.zeros((M, D), jnp.float32)
+    kpipe = build_pipeline("probit_plus", use_kernels=True, chunk=CHUNK)
+    kwire, _ = kpipe.compress_wire(key, deltas, B_SCALAR, res0)
+    np.testing.assert_array_equal(
+        np.asarray(kwire.packed), golden["kernel_packed"]
+    )
+    np.testing.assert_allclose(
+        np.asarray(kpipe.estimate(kwire)), golden["kernel_theta"], atol=1e-6
+    )
+
+
+def test_k1_golden_pytree(golden):
+    from repro.fl.pytree_wire import (
+        aggregate_pytree,
+        compress_pytree,
+        init_wire_state,
+        stream_aggregate_pytree,
+    )
+
+    pipe = build_pipeline("probit_plus", error_feedback=True, chunk=CHUNK)
+    params = {
+        "w": jnp.zeros((3, 17), jnp.float32),
+        "b0": jnp.zeros((5,), jnp.float32),
+    }
+    tkey = jax.random.PRNGKey(SEED + 1)
+    tree_deltas = {
+        "w": 0.1
+        * jax.random.normal(jax.random.PRNGKey(55), (M, 3, 17), jnp.float32),
+        "b0": 0.1
+        * jax.random.normal(jax.random.PRNGKey(56), (M, 5), jnp.float32),
+    }
+    state = init_wire_state(params, M)
+    wires, _ = compress_pytree(pipe, tkey, tree_deltas, B_SCALAR, state)
+    for i, w in enumerate(wires):
+        np.testing.assert_array_equal(
+            np.asarray(w.packed), golden[f"pytree_packed_{i}"]
+        )
+    theta_tree, st2 = aggregate_pytree(
+        pipe, tkey, tree_deltas, B_SCALAR, state
+    )
+    np.testing.assert_allclose(
+        np.asarray(theta_tree["w"]), golden["pytree_theta_w"], atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(theta_tree["b0"]), golden["pytree_theta_b0"], atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(st2.residuals["w"]), golden["pytree_res_w"], atol=1e-6
+    )
+    theta_s, _ = stream_aggregate_pytree(
+        pipe, tkey, tree_deltas, B_SCALAR, state, client_chunk=CLIENT_CHUNK
+    )
+    np.testing.assert_allclose(
+        np.asarray(theta_s["w"]), golden["pytree_stream_theta_w"], atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(theta_s["b0"]), golden["pytree_stream_theta_b0"], atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# Randomized-response DP at k > 1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("eps", [0.1, 0.5, 2.0])
+def test_rr_privacy_loss_within_eps(bits, eps):
+    """Empirical worst-case LLR of the gamma-mixed L-level wire <= eps for
+    adjacent updates at the l1-sensitivity budget."""
+    sens = 2e-4
+    d = 24
+    b = jnp.full((d,), 0.3)
+    da = 0.05 * jax.random.normal(jax.random.PRNGKey(2), (d,))
+    gam = rr_gamma(eps, sens, b, bits)
+    # concentrated (one coordinate) and spread adjacency both bounded
+    db_one = da.at[3].add(sens)
+    db_spread = da + sens / d
+    for db in (db_one, db_spread):
+        loss = float(privacy_loss(da, db, b, bits=bits, gamma=gam))
+        assert loss <= eps + 1e-5
+
+
+def test_rr_gamma_monotone_and_debias():
+    """gamma shrinks with eps (weaker privacy -> less mixing) and grows
+    with bits (finer grid -> smaller step -> more mixing needed); the
+    server's 1/(1-gamma) debias keeps the DP estimate near-unbiased."""
+    b = jnp.float32(0.3)
+    g_eps = [float(rr_gamma(e, 2e-4, b, 2)) for e in (0.1, 0.5, 2.0)]
+    assert g_eps == sorted(g_eps, reverse=True)
+    g_bits = [float(rr_gamma(0.5, 2e-4, b, k)) for k in (2, 4)]
+    assert g_bits[0] < g_bits[1]
+
+    key = jax.random.PRNGKey(11)
+    m, d = 400, 32
+    deltas = jnp.tile(
+        0.05 * jax.random.normal(jax.random.PRNGKey(4), (1, d)), (m, 1)
+    )
+    pipe = build_pipeline(
+        "probit_plus", wire_bits=2, dp=DPConfig(1.0), chunk=64
+    )
+    wire, _ = pipe.compress_wire(key, deltas, 0.3, jnp.zeros((m, d)))
+    theta = pipe.estimate(wire)
+    err = float(jnp.max(jnp.abs(theta - deltas[0])))
+    # step/sqrt(M) sampling noise dominates; debiased mean stays close
+    assert err < 0.05
+
+
+def test_k1_dp_path_unchanged():
+    """At wire_bits=1 the DP mechanism is the paper's b-floor margin —
+    rr mixing must NOT engage (gamma is None; b carries the margin)."""
+    pipe = build_pipeline("probit_plus", dp=DPConfig(0.5), chunk=64)
+    comp = pipe.compressor
+    assert comp._gamma(jnp.full((4,), 0.3)) is None
+    b_vec = comp.b_vector(8, 0.3)
+    margin = (1.0 + 1.0 / 0.5) * 2e-4
+    np.testing.assert_allclose(np.asarray(b_vec), 0.3 + margin, atol=1e-7)
+    # k>1: margin off, rr gamma on
+    pipe2 = build_pipeline(
+        "probit_plus", wire_bits=2, dp=DPConfig(0.5), chunk=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(pipe2.compressor.b_vector(8, 0.3)), 0.3, atol=1e-7
+    )
+    assert pipe2.compressor._gamma(jnp.full((4,), 0.3)) is not None
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-client bit-widths
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_client_groups_rle():
+    assert hetero_client_groups((1, 1, 2, 2, 4)) == (
+        (0, 2, 1), (2, 4, 2), (4, 5, 4),
+    )
+    assert hetero_client_groups((2,) * 3) == ((0, 3, 2),)
+    assert hetero_client_groups((1, 2, 1)) == ((0, 1, 1), (1, 2, 2), (2, 3, 1))
+    with pytest.raises(ValueError):
+        hetero_client_groups((1, 3))
+
+
+def test_hetero_wire_matches_per_group_homogeneous():
+    """Each HeteroWire group is byte-identical to a homogeneous compress
+    of the same rows at the same cohort offset."""
+    key = jax.random.PRNGKey(SEED)
+    deltas = _golden_deltas()
+    res0 = jnp.zeros((M, D), jnp.float32)
+    cb = (1,) * 4 + (2,) * 4 + (4,) * 4
+    ph = build_pipeline("probit_plus", client_bits=cb, chunk=CHUNK)
+    wh, _ = ph.compress_wire(key, deltas, B_SCALAR, res0)
+    assert isinstance(wh, HeteroWire)
+    assert [w.bits for w in wh.wires] == [1, 2, 4]
+    for (start, stop, gbits), w in zip(hetero_client_groups(cb), wh.wires):
+        pg = build_pipeline("probit_plus", wire_bits=gbits, chunk=CHUNK)
+        ref, _ = pg.compressor.compress(
+            key, deltas[start:stop], B_SCALAR, res0[start:stop],
+            row_offset=start,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(w.packed), np.asarray(ref.packed)
+        )
+    theta = ph.estimate(wh)
+    assert bool(jnp.all(jnp.isfinite(theta)))
+    assert bool(jnp.all(jnp.abs(theta) <= B_SCALAR + 1e-6))
+
+
+def test_hetero_uniform_bits_matches_homogeneous():
+    """All-equal client_bits reduces to the homogeneous estimate exactly
+    (one group, merge weight cancels)."""
+    key = jax.random.PRNGKey(SEED)
+    deltas = _golden_deltas()
+    res0 = jnp.zeros((M, D), jnp.float32)
+    ph = build_pipeline("probit_plus", client_bits=(2,) * M, chunk=CHUNK)
+    p2 = build_pipeline("probit_plus", wire_bits=2, chunk=CHUNK)
+    th_h = ph(key, deltas, B_SCALAR, res0)[0]
+    th_2 = p2(key, deltas, B_SCALAR, res0)[0]
+    np.testing.assert_allclose(np.asarray(th_h), np.asarray(th_2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FLConfig validation
+# ---------------------------------------------------------------------------
+
+
+def test_flconfig_rejects_bad_wire_bits():
+    with pytest.raises(ValueError, match="wire_bits"):
+        FLConfig(wire_bits=3)
+    with pytest.raises(ValueError, match="probit_plus"):
+        FLConfig(aggregator="signsgd_mv", wire_bits=2)
+    with pytest.raises(ValueError, match="top-k"):
+        FLConfig(wire_bits=2, topk_frac=0.1)
+
+
+def test_flconfig_rejects_bad_client_bits():
+    with pytest.raises(ValueError, match="client_bits"):
+        FLConfig(n_clients=4, client_bits=(1, 2))  # wrong length
+    with pytest.raises(ValueError, match="client_bits"):
+        FLConfig(n_clients=4, client_bits=(1, 2, 3, 4))  # bad entry
+    with pytest.raises(ValueError, match="kernel"):
+        FLConfig(n_clients=4, client_bits=(1, 2, 2, 4), use_kernels=True)
+    with pytest.raises(ValueError, match="stream"):
+        FLConfig(n_clients=4, client_bits=(1, 2, 2, 4), client_chunk=2)
+    with pytest.raises(ValueError, match="async"):
+        FLConfig(n_clients=4, client_bits=(1, 2, 2, 4), async_buffer=2)
+    # valid config threads through to the pipeline
+    cfg = FLConfig(n_clients=4, client_bits=[1, 2, 2, 4])
+    assert cfg.client_bits == (1, 2, 2, 4)
+    assert cfg.pipeline().compressor.client_bits == (1, 2, 2, 4)
+
+
+def test_flconfig_wire_bits_round_smoke():
+    """A tiny end-to-end k=2 FL round through the runtime config path."""
+    from repro.data import make_classification, partition_label_skew
+    from repro.fl import rounds as R
+    from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
+    import functools
+
+    (xtr, ytr), (xte, yte) = make_classification(0, n_train=200, n_test=50)
+    parts = partition_label_skew(ytr, 4, 2, 30, seed=1)
+    cfg = FLConfig(
+        n_clients=4, rounds=1, local_epochs=1, wire_bits=2, batch_size=10
+    )
+    ctx = R.make_context(
+        cfg,
+        init_mlp(jax.random.PRNGKey(0), hidden=4),
+        functools.partial(xent_loss, mlp_logits),
+        functools.partial(accuracy, mlp_logits),
+        np.stack([xtr[i] for i in parts]),
+        np.stack([ytr[i] for i in parts]),
+        {"x": xte, "y": yte},
+    )
+    state = R.init_run_state(ctx)
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    state, m = R.round_fn(ctx)(
+        ctx, R.cell_params(cfg), k2, state, R.round_batches(ctx, k1)
+    )
+    assert np.isfinite(float(m["loss"]))
+    assert bool(jnp.all(jnp.isfinite(state.w_global)))

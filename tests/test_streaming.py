@@ -286,6 +286,26 @@ def test_stateless_clients_smoke(round_env):
     assert np.isfinite(float(m["loss"]))
 
 
+def test_kbit_stream_round_smoke(round_env):
+    """k=2 wire (the CI smoke cell): chunked round == dense round exactly.
+
+    The plane-major k-bit wire streams through the *unchanged* count
+    protocol — the flat count carry of a ``bits * P``-byte row is the
+    per-plane vote count — so chunk-vs-dense parity holds bit-for-bit
+    just as at k=1.
+    """
+    base = dict(
+        n_clients=N, rounds=2, local_epochs=1, aggregator="probit_plus",
+        wire_bits=2,
+    )
+    dense, _ = _run(round_env, FLConfig(**base))
+    stream, _ = _run(round_env, FLConfig(**base, client_chunk=4))
+    for field in ("w_global", "w_locals", "residuals"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(dense, field)), np.asarray(getattr(stream, field))
+        )
+
+
 def test_campaign_planner_streams_fused_groups():
     """plan_campaign flips fusable groups past the threshold to streaming,
     with metric parity against the dense plan and peak-bytes stats."""

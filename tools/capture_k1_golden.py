@@ -1,0 +1,115 @@
+"""Capture the pre-refactor k=1 golden wire vectors (PR-9 regression pin).
+
+Run ONCE at the pre-refactor HEAD; the emitted ``tests/data/k1_golden.npz``
+pins the one-bit wire byte-for-byte. ``tests/test_kbit.py`` recomputes the
+same four paths (dense, chunked-streaming, kernel-ref, pytree) after the
+k-bit refactor and asserts packed bytes / counts exactly and theta / EF
+residuals to the jit-reassociation tolerance — so ``wire_bits=1`` can
+never drift from the paper's wire.
+
+  PYTHONPATH=src python tools/capture_k1_golden.py
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import build_pipeline
+from repro.core.quantizer import packed_counts
+from repro.fl.pytree_wire import (
+    aggregate_pytree,
+    compress_pytree,
+    init_wire_state,
+    stream_aggregate_pytree,
+)
+
+M, D, CHUNK, CLIENT_CHUNK = 12, 50, 64, 4
+B_SCALAR = 0.4
+SEED = 7
+
+
+def client_deltas(m, d):
+    k = jax.random.PRNGKey(1234)
+    return 0.1 * jax.random.normal(k, (m, d), jnp.float32)
+
+
+def main() -> None:
+    out = {}
+    key = jax.random.PRNGKey(SEED)
+    deltas = client_deltas(M, D)
+    res0 = jnp.zeros((M, D), jnp.float32)
+
+    # -- dense path (EF on) ------------------------------------------------
+    pipe = build_pipeline("probit_plus", error_feedback=True, chunk=CHUNK)
+    wire, res = pipe.compress_wire(key, deltas, B_SCALAR, res0)
+    out["dense_packed"] = np.asarray(wire.packed)
+    out["dense_counts"] = np.asarray(packed_counts(wire.packed))
+    out["dense_theta"] = np.asarray(pipe.estimate(wire))
+    out["dense_residuals"] = np.asarray(res)
+    out["dense_b"] = np.asarray(wire.b)
+
+    # -- chunked-streaming path (count protocol, row_offset rebasing) ------
+    comp, server = pipe.compressor, pipe.server
+    p_bytes = comp.wire_bytes(D)
+    b_vec = comp.b_vector(D, B_SCALAR)
+    counts = server.init_counts(p_bytes)
+    res_stream = np.zeros((M, D), np.float32)
+    for g0 in range(0, M, CLIENT_CHUNK):
+        w_ch, r_ch = comp.compress(
+            key,
+            deltas[g0 : g0 + CLIENT_CHUNK],
+            B_SCALAR,
+            res0[g0 : g0 + CLIENT_CHUNK],
+            row_offset=g0,
+        )
+        counts = server.accumulate_counts(counts, w_ch.packed)
+        res_stream[g0 : g0 + CLIENT_CHUNK] = np.asarray(r_ch)
+    out["stream_counts"] = np.asarray(counts)
+    out["stream_theta"] = np.asarray(server.finalize(counts, M, b_vec))
+    out["stream_residuals"] = res_stream
+
+    # -- kernel-ref path (use_kernels=True routes to the ref engine on CPU)
+    kpipe = build_pipeline("probit_plus", use_kernels=True, chunk=CHUNK)
+    kwire, _ = kpipe.compress_wire(key, deltas, B_SCALAR, res0)
+    out["kernel_packed"] = np.asarray(kwire.packed)
+    out["kernel_theta"] = np.asarray(kpipe.estimate(kwire))
+
+    # -- pytree path (two leaves, one with size % 8 != 0) ------------------
+    params = {
+        "w": jnp.zeros((3, 17), jnp.float32),
+        "b0": jnp.zeros((5,), jnp.float32),
+    }
+    tkey = jax.random.PRNGKey(SEED + 1)
+    tree_deltas = {
+        "w": 0.1
+        * jax.random.normal(jax.random.PRNGKey(55), (M, 3, 17), jnp.float32),
+        "b0": 0.1
+        * jax.random.normal(jax.random.PRNGKey(56), (M, 5), jnp.float32),
+    }
+    state = init_wire_state(params, M)
+    wires, _ = compress_pytree(pipe, tkey, tree_deltas, B_SCALAR, state)
+    for i, w in enumerate(wires):
+        out[f"pytree_packed_{i}"] = np.asarray(w.packed)
+    theta_tree, st2 = aggregate_pytree(pipe, tkey, tree_deltas, B_SCALAR, state)
+    out["pytree_theta_w"] = np.asarray(theta_tree["w"])
+    out["pytree_theta_b0"] = np.asarray(theta_tree["b0"])
+    out["pytree_res_w"] = np.asarray(st2.residuals["w"])
+    theta_s, _ = stream_aggregate_pytree(
+        pipe, tkey, tree_deltas, B_SCALAR, state, client_chunk=CLIENT_CHUNK
+    )
+    out["pytree_stream_theta_w"] = np.asarray(theta_s["w"])
+    out["pytree_stream_theta_b0"] = np.asarray(theta_s["b0"])
+
+    path = os.path.join(os.path.dirname(__file__), "..", "tests", "data")
+    os.makedirs(path, exist_ok=True)
+    dest = os.path.join(path, "k1_golden.npz")
+    np.savez_compressed(dest, **out)
+    print(f"wrote {dest}:")
+    for k, v in sorted(out.items()):
+        print(f"  {k}: shape={v.shape} dtype={v.dtype}")
+
+
+if __name__ == "__main__":
+    main()
