@@ -11,10 +11,17 @@ Two input shapes are accepted:
   available, so the band is the z*SEM half-width from
   :meth:`CellResult.trajectory`;
 * a saved campaign JSON artifact (path or loaded dict, the
-  :meth:`CampaignResult.to_json` structure) — only per-round means
-  survive serialization, so the band collapses to the line.
+  :meth:`CampaignResult.to_json` structure) — both the per-round means
+  and the serialized ``trajectory_ci`` half-widths are read, so a PNG
+  rendered from a JSON on disk carries the same mean±CI bands as one
+  rendered live (older artifacts without ``trajectory_ci`` degrade to a
+  band-less line).
+
+CLI: render any campaign JSON on disk to a trajectory PNG, e.g. the
+nightly artifacts::
 
   PYTHONPATH=src python -m benchmarks.plots reports/fig_bits_frontier.json
+  PYTHONPATH=src python -m benchmarks.plots reports/fig_tree_throughput_campaign.json --metric theta_mse --logy
 """
 
 from __future__ import annotations
@@ -49,7 +56,13 @@ def _cell_series(result: Any, metric: str) -> dict[str, tuple[np.ndarray, np.nda
             if traj is None:
                 continue
             mean = np.asarray(traj, np.float64)
-            series[name] = (mean, np.zeros_like(mean))
+            ci = cell.get("trajectory_ci", {}).get(metric)
+            half = (
+                np.asarray(ci, np.float64)
+                if ci is not None
+                else np.zeros_like(mean)
+            )
+            series[name] = (mean, half)
         return series
     # live CampaignResult
     return {

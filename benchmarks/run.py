@@ -23,7 +23,7 @@ def main() -> None:
     from . import fig3_dynamic_b, fig4_clients_privacy, table1_byzantine
     from . import fig_async_staleness, fig_privacy_amplification
     from . import fig_campaign_throughput, fig_streaming_clients
-    from . import fig_bits_frontier
+    from . import fig_bits_frontier, fig_tree_throughput
     from . import theorem_rates, kernels_micro, roofline
 
     results = {}
@@ -50,6 +50,9 @@ def main() -> None:
     )
     print("# --- Bits frontier: wire_bits x byz_frac x eps grid ---")
     results["fig_bits"] = fig_bits_frontier.main(rounds)
+    print("# --- Tree throughput: clients/sec vs edge count ---")
+    # --quick runs the reduced (smoke) grid: smaller M, fewer edge counts
+    results["fig_tree"] = fig_tree_throughput.main(rounds, smoke=args.quick)
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -78,6 +78,9 @@ __all__ = [
     "flip_codes",
     "flip_wire",
     "flip_wire_rows",
+    "EDGE_ATTACK_IDS",
+    "edge_attack_id",
+    "apply_edge_attack",
 ]
 
 
@@ -324,6 +327,101 @@ def apply_attack_stream(
     }
     branches = [branch_map.get(name, _identity) for name in ATTACK_IDS]
     return jax.lax.switch(idx, branches, key, updates)
+
+
+# -- Byzantine *edge aggregators* (hierarchical tree rounds) ---------------
+#
+# The tree topology (fl/hierarchy.py) introduces a new adversary class per
+# Egger & Bitar (arxiv 2506.09870): a compromised *edge node* that honestly
+# collected its clients' one-bit codes but ships a corrupted count tensor
+# to the root. Unlike client attacks, an edge attack rewrites an entire
+# (8 * p_bytes,) vote-count vector at once — one bad edge speaks with the
+# weight of its whole client slice. All three adversaries preserve the
+# count invariant 0 <= N_i <= mass (a root-side range check cannot detect
+# them), which is what makes the robust rate-space merges in
+# ``fl.hierarchy._root_merge`` necessary rather than simple sanitization:
+#
+# * ``edge_sign_flip`` — ships the per-plane complement ``mass - N``:
+#   every client bit on the edge reads inverted, the count-space analogue
+#   of the ``bit_flip`` wire adversary applied to the whole slice.
+# * ``edge_inflate``  — saturates every count to the full active mass
+#   (``N = mass``: "all my clients voted +1 on every coordinate"), driving
+#   the Eq. 13 estimate to the +b corner.
+# * ``edge_replay``   — re-ships the count tensor the root last buffered
+#   for this edge's slot (stale-replay; falls back to the honest fresh
+#   tensor while the slot is empty). The replayed tensor arrives as a
+#   fresh delivery, so its staleness age resets — the timing analogue of
+#   the ``straggler`` client adversary, freezing the edge's vote at an old
+#   model. Requires a buffered tree (``FLConfig.edge_buffer > 0``).
+#
+# Like ATTACK_IDS, branch order is part of the dispatch contract:
+# append, never reorder.
+EDGE_ATTACK_IDS: tuple[str, ...] = (
+    "none",
+    "edge_sign_flip",
+    "edge_inflate",
+    "edge_replay",
+)
+
+
+def edge_attack_id(name: str) -> int:
+    """Integer id of an edge-aggregator attack (lax.switch branch index)."""
+    if name not in EDGE_ATTACK_IDS:
+        raise ValueError(
+            f"unknown edge attack {name!r}; available: {EDGE_ATTACK_IDS}"
+        )
+    return EDGE_ATTACK_IDS.index(name)
+
+
+def apply_edge_attack(
+    idx,
+    counts: jax.Array,
+    mass: jax.Array,
+    prev_counts: jax.Array,
+    prev_mass: jax.Array,
+    prev_valid: jax.Array,
+    byz_mask: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Rewrite Byzantine edges' shipped count tensors before the root merge.
+
+    ``counts`` is the stacked ``(E, 8 * p_bytes)`` f32 per-edge vote counts
+    and ``mass`` the ``(E,)`` per-edge active-mass scalars, both honest as
+    produced by the edge scans; ``prev_*`` is what the root's buffer held
+    for each edge's slot *before* this round's deliveries (zeros/invalid in
+    unbuffered trees — config validation keeps ``edge_replay`` out of
+    those). ``byz_mask`` marks the compromised edges (the first
+    ``FLConfig.byz_edges`` rows, mirroring the client convention). Honest
+    edges pass through bit-untouched; no attack alters the shipped *mass*
+    (the adversaries forge votes, not cohort sizes — a mass forgery is
+    root-detectable by cross-edge bookkeeping).
+    """
+
+    def _identity(c, m):
+        return c, m
+
+    def _sign_flip(c, m):
+        return m[:, None] - c, m
+
+    def _inflate(c, m):
+        return jnp.broadcast_to(m[:, None], c.shape), m
+
+    def _replay(c, m):
+        return (
+            jnp.where(prev_valid[:, None], prev_counts, c),
+            jnp.where(prev_valid, prev_mass, m),
+        )
+
+    branch_map = {
+        "edge_sign_flip": _sign_flip,
+        "edge_inflate": _inflate,
+        "edge_replay": _replay,
+    }
+    branches = [branch_map.get(name, _identity) for name in EDGE_ATTACK_IDS]
+    c_att, m_att = jax.lax.switch(idx, branches, counts, mass)
+    return (
+        jnp.where(byz_mask[:, None], c_att, counts),
+        jnp.where(byz_mask, m_att, mass),
+    )
 
 
 def flip_codes(codes: jax.Array, n_byz: int) -> jax.Array:

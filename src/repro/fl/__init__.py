@@ -19,6 +19,13 @@ from .rounds import (
     make_context,
     run_rounds,
 )
+from .hierarchy import (
+    EDGE_MERGES,
+    TreeRoundState,
+    edge_slices,
+    init_tree_state,
+    tree_fl_round,
+)
 from .pytree_wire import (
     PytreeWireState,
     aggregate_pytree,
@@ -52,4 +59,9 @@ __all__ = [
     "fl_round",
     "async_fl_round",
     "run_rounds",
+    "EDGE_MERGES",
+    "TreeRoundState",
+    "edge_slices",
+    "init_tree_state",
+    "tree_fl_round",
 ]

@@ -251,6 +251,25 @@ def make_context(
                 f"{n_dev} devices.",
                 RuntimeWarning,
             )
+    if cfg.tree_shard:
+        import warnings
+
+        n_dev = len(jax.devices())
+        if n_dev <= 1:
+            warnings.warn(
+                "tree_shard is a no-op: only one local device is visible. "
+                "For CPU scaling runs set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+                "importing jax.",
+                RuntimeWarning,
+            )
+        elif cfg.tree_edges % n_dev:
+            warnings.warn(
+                f"tree_shard falling back to a host-loop edge sweep: "
+                f"{cfg.tree_edges} edges do not divide across "
+                f"{n_dev} devices.",
+                RuntimeWarning,
+            )
     if masked and (cfg.async_buffer or cfg.participation < 1.0):
         raise ValueError(
             "masked (fused heterogeneous-M) contexts require synchronous "
@@ -320,16 +339,24 @@ def init_async_state(ctx: RoundContext, b_init=None) -> AsyncRoundState:
 
 
 def init_run_state(ctx: RoundContext, b_init=None):
-    """The state the context's config calls for (sync or buffered-async)."""
+    """The state the context's config calls for (sync, async, or tree)."""
     if ctx.cfg.async_buffer:
         return init_async_state(ctx, b_init)
+    if ctx.cfg.tree_edges and ctx.cfg.edge_buffer:
+        from .hierarchy import init_tree_state
+
+        return init_tree_state(ctx, b_init)
     return init_state(ctx, b_init)
 
 
 def round_fn(ctx: RoundContext):
-    """The round function matching the context (sync, streamed, or async)."""
+    """The round function matching the context (sync, streamed, async, tree)."""
     if ctx.cfg.async_buffer:
         return async_fl_round
+    if ctx.cfg.tree_edges:
+        from .hierarchy import tree_fl_round
+
+        return tree_fl_round
     if ctx.cfg.client_chunk:
         return stream_fl_round
     return fl_round
@@ -960,6 +987,10 @@ def run_rounds(
     rounds = rounds or ctx.cfg.rounds
     if isinstance(state, AsyncRoundState):
         step = async_fl_round
+    elif ctx.cfg.tree_edges:
+        from .hierarchy import tree_fl_round
+
+        step = tree_fl_round
     else:
         step = stream_fl_round if ctx.cfg.client_chunk else fl_round
 

@@ -140,6 +140,35 @@ class FLConfig:
     # dense synchronous probit_plus wire (no kernels / top-k / streaming /
     # async).
     client_bits: tuple | None = None
+    # Hierarchical count-tree aggregation (fl/hierarchy.py, ROADMAP's
+    # serving-scale item). 0 = flat aggregation; E > 0 splits the cohort
+    # into E contiguous edge slices, each running the chunked count scan
+    # (requires client_chunk > 0 and a count-streaming aggregator) and
+    # shipping one count tensor + active-mass scalar to the root. Zero
+    # staleness is bit-exact with the flat streaming round.
+    tree_edges: int = 0
+    # Bounded per-edge async buffer at the root (PR-3 semantics one level
+    # up): 0 = synchronous tree; B > 0 buffers edge deliveries (edge e ->
+    # slot e mod B) with Bernoulli(1/(1+async_latency)) arrivals and
+    # (1+age)^(-staleness_decay) root merge weights.
+    edge_buffer: int = 0
+    # Map edge reductions onto make_campaign_mesh devices (one device per
+    # E/n_dev edge group, psum-free root merge over the gathered edge
+    # tensors). Mirrors stream_shard's requirements: stateless clients,
+    # full participation, and E must divide n_active.
+    tree_shard: bool = False
+    # Byzantine *edge aggregators* (Egger & Bitar, arxiv 2506.09870): the
+    # first byz_edges edges ship count tensors corrupted per edge_attack
+    # (core.attacks.EDGE_ATTACK_IDS: edge_sign_flip / edge_inflate /
+    # edge_replay).
+    byz_edges: int = 0
+    edge_attack: str = "none"
+    # Root merge rule over the stacked edge count tensors: "sum" (exact
+    # additive protocol), "median" / "trimmed" (robust per-coordinate
+    # rate-space merges surviving a minority of Byzantine edges;
+    # edge_trim edges are cut from each end of the order statistics).
+    edge_merge: str = "sum"
+    edge_trim: int = 0
     seed: int = 0
 
     def __post_init__(self):
@@ -177,10 +206,13 @@ class FLConfig:
                 f"non-increasing in age), got {self.staleness_decay}"
             )
         if not self.async_buffer:
-            if self.async_latency > 0 or self.staleness_decay > 0:
+            if (self.async_latency > 0 or self.staleness_decay > 0) and (
+                not self.edge_buffer
+            ):
                 raise ValueError(
                     "async_latency/staleness_decay require buffered-async "
-                    "rounds (set async_buffer > 0)"
+                    "rounds (set async_buffer > 0 for client rounds or "
+                    "edge_buffer > 0 for a buffered-async tree root)"
                 )
             if is_timing_attack(self.attack):
                 raise ValueError(
@@ -343,6 +375,127 @@ class FLConfig:
                     "cannot reduce across shards; pick a count- or "
                     "sum-streaming aggregator"
                 )
+        if self.tree_edges < 0:
+            raise ValueError(f"tree_edges must be >= 0, got {self.tree_edges}")
+        if self.edge_buffer < 0:
+            raise ValueError(f"edge_buffer must be >= 0, got {self.edge_buffer}")
+        if not self.tree_edges:
+            tree_only = {
+                "edge_buffer": (self.edge_buffer, 0),
+                "tree_shard": (self.tree_shard, False),
+                "byz_edges": (self.byz_edges, 0),
+                "edge_attack": (self.edge_attack, "none"),
+                "edge_merge": (self.edge_merge, "sum"),
+                "edge_trim": (self.edge_trim, 0),
+            }
+            for name, (val, default) in tree_only.items():
+                if val != default:
+                    raise ValueError(
+                        f"{name}={val!r} requires a hierarchical tree round "
+                        "(set tree_edges > 0)"
+                    )
+        else:
+            from ..core.attacks import EDGE_ATTACK_IDS
+
+            _COUNT_STREAM_AGGREGATORS = ("probit_plus", "signsgd_mv", "rsa")
+            if self.aggregator not in _COUNT_STREAM_AGGREGATORS:
+                raise ValueError(
+                    f"tree_edges requires a count-streaming aggregator "
+                    f"(edges ship additive count tensors); "
+                    f"{self.aggregator!r} is not in "
+                    f"{_COUNT_STREAM_AGGREGATORS}"
+                )
+            if not self.client_chunk:
+                raise ValueError(
+                    "tree_edges requires client_chunk > 0: each edge runs "
+                    "the chunked count-accumulation scan over its slice"
+                )
+            if self.tree_edges > self.n_active:
+                raise ValueError(
+                    f"tree_edges={self.tree_edges} exceeds the cohort "
+                    f"({self.n_active} clients); an edge needs at least "
+                    "one client"
+                )
+            if self.async_buffer:
+                raise ValueError(
+                    "tree_edges and async_buffer are exclusive: the tree "
+                    "buffers *edge count tensors* at the root "
+                    "(edge_buffer), not client wire rows"
+                )
+            if self.stream_shard:
+                raise ValueError(
+                    "tree_edges shards by edge (tree_shard), not by the "
+                    "flat client axis; unset stream_shard"
+                )
+            if self.edge_buffer > self.tree_edges:
+                raise ValueError(
+                    f"edge_buffer={self.edge_buffer} exceeds tree_edges="
+                    f"{self.tree_edges}; slots beyond one per edge would "
+                    "never be written"
+                )
+            if self.edge_attack not in EDGE_ATTACK_IDS:
+                raise ValueError(
+                    f"unknown edge_attack {self.edge_attack!r}; "
+                    f"available: {EDGE_ATTACK_IDS}"
+                )
+            if not 0 <= self.byz_edges <= self.tree_edges:
+                raise ValueError(
+                    f"byz_edges must be in [0, tree_edges], got "
+                    f"{self.byz_edges} with tree_edges={self.tree_edges}"
+                )
+            if self.byz_edges and self.edge_attack == "none":
+                raise ValueError(
+                    "byz_edges > 0 needs an edge_attack from "
+                    f"{EDGE_ATTACK_IDS[1:]}"
+                )
+            if self.edge_attack == "edge_replay" and not self.edge_buffer:
+                raise ValueError(
+                    "edge_replay re-ships the root's buffered slot content "
+                    "and needs a buffered tree (set edge_buffer > 0)"
+                )
+            from .hierarchy import EDGE_MERGES
+
+            if self.edge_merge not in EDGE_MERGES:
+                raise ValueError(
+                    f"unknown edge_merge {self.edge_merge!r}; "
+                    f"available: {EDGE_MERGES}"
+                )
+            if self.edge_merge != "sum" and self.edge_buffer:
+                raise ValueError(
+                    "robust edge merges (median/trimmed) operate on fresh "
+                    "edge tensors; staleness-weighted robust merging is "
+                    "not supported (set edge_buffer=0)"
+                )
+            if self.edge_trim and self.edge_merge != "trimmed":
+                raise ValueError(
+                    "edge_trim only applies to edge_merge='trimmed'"
+                )
+            if self.edge_merge == "trimmed" and (
+                2 * self.edge_trim >= self.tree_edges
+            ):
+                raise ValueError(
+                    f"edge_trim={self.edge_trim} trims away all "
+                    f"{self.tree_edges} edges (need 2*edge_trim < tree_edges)"
+                )
+            if self.tree_shard:
+                if not self.stateless_clients:
+                    raise ValueError(
+                        "tree_shard requires stateless_clients: scattering "
+                        "per-client state back from device-local edge "
+                        "slices is not supported"
+                    )
+                if self.participation < 1.0:
+                    raise ValueError(
+                        "tree_shard requires participation == 1.0 (the "
+                        "static client-data shard layout cannot follow a "
+                        "resampled cohort)"
+                    )
+                if self.n_active % self.tree_edges:
+                    raise ValueError(
+                        f"tree_shard needs equal edge slices: tree_edges="
+                        f"{self.tree_edges} does not divide the "
+                        f"{self.n_active}-client cohort"
+                    )
 
     @property
     def n_active(self) -> int:
@@ -429,8 +582,14 @@ class FLSimulation:
         )
         self.state = _rounds.init_run_state(self.ctx)
         self._params = _rounds.cell_params(cfg)
+        # The carried round state is donated: each round's count/buffer
+        # planes reuse the previous round's buffers instead of
+        # reallocating (the driver below never re-reads the old state).
+        # Callers must snapshot arrays (np.asarray) before run(), not hold
+        # live references across it.
         self._round = jax.jit(
-            functools.partial(_rounds.round_fn(self.ctx), self.ctx, self._params)
+            functools.partial(_rounds.round_fn(self.ctx), self.ctx, self._params),
+            donate_argnums=(1,),
         )
         self.history: list[dict] = []
         # One DP event is recorded per executed round; eps_spent in the

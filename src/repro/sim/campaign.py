@@ -296,6 +296,10 @@ def _peak_bytes_est(ctx, n_elems_per_dev: int) -> int:
     else:
         wire = rows * p_bytes
         acc = 8 * p_bytes * 4  # one int32/f32 vote count per padded bit
+        if cfg.tree_edges:
+            # Stacked per-edge count tensors at the root, plus the bounded
+            # async edge buffer when configured.
+            acc += (cfg.tree_edges + cfg.edge_buffer) * 8 * p_bytes * 4
     return n_elems_per_dev * (wire + acc)
 
 
@@ -540,6 +544,7 @@ def run_campaign(
             "client_chunk": (
                 group.client_chunk or cfgs[group.cell_idx[0]].client_chunk
             ),
+            "tree_edges": cfgs[group.cell_idx[0]].tree_edges,
             "peak_bytes_est": L["peak_bytes"],
             "n_devices": L["n_dev"],
             "n_elems": L["n"],

@@ -157,6 +157,13 @@ class CampaignResult:
                     "trajectory_mean": {
                         m: np.asarray(c.trajectory(m)[0]).tolist() for m in c.metrics
                     },
+                    # z*SEM half-width per round, so plots rendered from
+                    # the JSON artifact on disk keep their CI bands
+                    # (benchmarks/plots.py reads this; zeros for a single
+                    # seed).
+                    "trajectory_ci": {
+                        m: np.asarray(c.trajectory(m)[1]).tolist() for m in c.metrics
+                    },
                 }
                 for c in self.cells
             },

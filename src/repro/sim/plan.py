@@ -85,6 +85,10 @@ def fusable(cfg: FLConfig) -> bool:
         and cfg.byz_frac == 0.0
         and cfg.topk_frac >= 1.0
         and cfg.b_mode != "oracle"
+        # Tree rounds slice the cohort into static per-edge spans, so the
+        # client axis cannot pad to a group max (an edge would straddle
+        # real and padded rows with a traced boundary).
+        and cfg.tree_edges == 0
     )
 
 
@@ -168,6 +172,11 @@ class CampaignPlan:
             kind = f"fused@M<={g.m_pad}" if g.fused else f"M={g.m_pad}"
             if g.client_chunk:
                 kind += f", stream@{g.client_chunk}"
+            g_cfg = self.spec.config(self.spec.cells[g.cell_idx[0]])
+            if g_cfg.tree_edges:
+                kind += f", tree@{g_cfg.tree_edges}"
+                if g_cfg.edge_buffer:
+                    kind += f"/buf{g_cfg.edge_buffer}"
             names = ", ".join(self.spec.cells[i].name for i in g.cell_idx)
             lines.append(f"  [{kind}] {g.n_cells} cells: {names}")
         return "\n".join(lines)

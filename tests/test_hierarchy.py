@@ -1,0 +1,571 @@
+"""Hierarchical count-tree aggregation: parity, robustness, shard, memory.
+
+The tree round (``FLConfig.tree_edges > 0``) must be a pure *execution
+topology* change for honest synchronous runs — clients -> edges -> root
+produces the same estimates as the flat streaming round. Four layers are
+pinned here:
+
+* **bit-exact parity** — tree == flat streaming round for every
+  count-streaming scheme, edge counts that do and do not divide M, under
+  participation sampling, error feedback, and client-level Byzantine
+  attacks (full carried state, eager); <= 1e-6 under jit; the buffered
+  tree at zero latency / zero decay degenerates to the same bits;
+* **Byzantine edges** — the naive additive root merge inherits a
+  minority-edge corruption that the rate-space median merge survives;
+* **device mapping** — ``tree_shard`` under 4 virtual CPU devices
+  reproduces the host-loop edge sweep (subprocess: the XLA flag must
+  precede jax platform init; the CI ``tree-smoke`` job runs this);
+* **memory bound** — a 60k-client tree round completes under the same
+  hard ``RLIMIT_AS`` cap as the flat streaming round (the donated round
+  state reuses its buffers instead of reallocating per round).
+"""
+
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import EDGE_ATTACK_IDS, apply_edge_attack, edge_attack_id
+from repro.data import make_classification, partition_label_skew
+from repro.fl import rounds as R
+from repro.fl.hierarchy import TreeRoundState, edge_slices
+from repro.fl.runtime import FLConfig
+from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
+
+COUNT_SCHEMES = ("probit_plus", "signsgd_mv", "rsa")
+N = 10
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# Edge slicing (unit)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,n_edges", [(10, 1), (10, 2), (10, 3), (10, 10), (7, 4)])
+def test_edge_slices_partition(n, n_edges):
+    """Slices are contiguous, disjoint, cover [0, n), balanced to +-1."""
+    slices = edge_slices(n, n_edges)
+    assert len(slices) == n_edges
+    row = 0
+    sizes = []
+    for row0, n_e in slices:
+        assert row0 == row
+        assert n_e >= 1
+        sizes.append(n_e)
+        row += n_e
+    assert row == n
+    assert max(sizes) - min(sizes) <= 1
+
+
+# ---------------------------------------------------------------------------
+# Round parity: tree == flat streaming round
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def round_env():
+    (xtr, ytr), (xte, yte) = make_classification(0, n_train=1000, n_test=200)
+    parts = partition_label_skew(ytr, N, 2, 60, seed=1)
+    return dict(
+        p0=init_mlp_cached(),
+        loss=functools.partial(xent_loss, mlp_logits),
+        acc=functools.partial(accuracy, mlp_logits),
+        cx=np.stack([xtr[i] for i in parts]),
+        cy=np.stack([ytr[i] for i in parts]),
+        test={"x": xte, "y": yte},
+    )
+
+
+def init_mlp_cached():
+    return init_mlp(jax.random.PRNGKey(0), hidden=8)
+
+
+def _run(round_env, cfg, rounds=2, eager=True):
+    ctx = R.make_context(
+        cfg,
+        round_env["p0"],
+        round_env["loss"],
+        round_env["acc"],
+        round_env["cx"],
+        round_env["cy"],
+        round_env["test"],
+    )
+    params = R.cell_params(cfg)
+    state = R.init_run_state(ctx)
+    key = jax.random.PRNGKey(cfg.seed)
+    fn = R.round_fn(ctx)
+    with jax.disable_jit(eager):
+        for _ in range(rounds):
+            key, kb, kr = jax.random.split(key, 3)
+            state, m = fn(ctx, params, kr, state, R.round_batches(ctx, kb))
+    return state, m
+
+
+@pytest.mark.parametrize("agg", COUNT_SCHEMES)
+@pytest.mark.parametrize("edges", [2, 3])
+def test_tree_parity_count_schemes(round_env, agg, edges):
+    """Tree == flat, bit-exact, for every count scheme; 3 does not divide
+    M = 10, so uneven edge slices are on the asserted path."""
+    base = dict(
+        n_clients=N, rounds=2, local_epochs=1, aggregator=agg, client_chunk=4
+    )
+    flat, _ = _run(round_env, FLConfig(**base))
+    tree, _ = _run(round_env, FLConfig(**base, tree_edges=edges))
+    np.testing.assert_array_equal(
+        np.asarray(flat.w_global), np.asarray(tree.w_global)
+    )
+    np.testing.assert_array_equal(np.asarray(flat.b.b), np.asarray(tree.b.b))
+
+
+@pytest.mark.parametrize(
+    "extra",
+    [
+        dict(participation=0.7),
+        dict(error_feedback=True),
+        dict(byz_frac=0.2, attack="sign_flip"),
+    ],
+    ids=["participation", "error_feedback", "sign_flip"],
+)
+def test_tree_parity_masks_state_attacks(round_env, extra):
+    """Parity extends to the full carried state (w_locals, residuals)
+    under cohort sampling, EF, and client-level Byzantine attacks."""
+    base = dict(
+        n_clients=N, rounds=2, local_epochs=1, aggregator="probit_plus",
+        client_chunk=4, **extra,
+    )
+    flat, _ = _run(round_env, FLConfig(**base))
+    tree, _ = _run(round_env, FLConfig(**base, tree_edges=3))
+    for field in ("w_global", "w_locals", "residuals"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(flat, field)), np.asarray(getattr(tree, field))
+        )
+
+
+@pytest.mark.parametrize("agg", COUNT_SCHEMES)
+def test_tree_buffered_zero_staleness_parity(round_env, agg):
+    """edge_buffer == tree_edges at zero latency / zero decay refreshes
+    every slot every round with weight exactly 1.0 — bit-identical to the
+    unbuffered tree (and hence to the flat round)."""
+    base = dict(
+        n_clients=N, rounds=2, local_epochs=1, aggregator=agg, client_chunk=4
+    )
+    flat, _ = _run(round_env, FLConfig(**base))
+    buf, _ = _run(round_env, FLConfig(**base, tree_edges=3, edge_buffer=3))
+    assert isinstance(buf, TreeRoundState)
+    np.testing.assert_array_equal(
+        np.asarray(flat.w_global), np.asarray(buf.w_global)
+    )
+    np.testing.assert_array_equal(np.asarray(flat.b.b), np.asarray(buf.b.b))
+    assert bool(np.all(np.asarray(buf.edge_valid)))
+    assert np.all(np.asarray(buf.edge_age) == 0)
+
+
+def test_tree_parity_under_jit(round_env):
+    base = dict(
+        n_clients=N, rounds=2, local_epochs=1, aggregator="probit_plus",
+        client_chunk=4,
+    )
+    flat, _ = _run(round_env, FLConfig(**base), eager=False)
+    tree, _ = _run(round_env, FLConfig(**base, tree_edges=3), eager=False)
+    np.testing.assert_allclose(
+        np.asarray(flat.w_global), np.asarray(tree.w_global), atol=1e-6
+    )
+
+
+def test_tree_smoke_metrics(round_env):
+    """The tree round's extra health metrics exist and are finite."""
+    cfg = FLConfig(
+        n_clients=N, rounds=2, local_epochs=1, aggregator="probit_plus",
+        client_chunk=4, tree_edges=3, edge_buffer=2, async_latency=1.0,
+        staleness_decay=0.5,
+    )
+    state, m = _run(round_env, cfg, eager=False)
+    assert isinstance(state, TreeRoundState)
+    for k in ("loss", "theta_mse", "edge_mass_min", "buf_fill", "mean_age"):
+        assert np.isfinite(float(m[k])), k
+    assert 0.0 <= float(m["buf_fill"]) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Byzantine edge aggregators
+# ---------------------------------------------------------------------------
+
+
+def test_apply_edge_attack_semantics():
+    """Unit semantics of each edge corruption; honest edges untouched and
+    the 0 <= N <= mass invariant (range-check undetectability) holds."""
+    counts = jnp.asarray([[1.0, 2.0], [3.0, 0.0], [2.0, 2.0]])
+    mass = jnp.asarray([4.0, 4.0, 4.0])
+    prev_c = jnp.asarray([[9.0, 9.0]] * 3)
+    prev_m = jnp.asarray([7.0, 7.0, 7.0])
+    prev_v = jnp.asarray([True, True, False])
+    byz = jnp.asarray([True, False, True])
+
+    c, m = apply_edge_attack(
+        edge_attack_id("edge_sign_flip"), counts, mass, prev_c, prev_m, prev_v, byz
+    )
+    np.testing.assert_array_equal(
+        np.asarray(c), [[3.0, 2.0], [3.0, 0.0], [2.0, 2.0]]
+    )
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mass))
+
+    c, m = apply_edge_attack(
+        edge_attack_id("edge_inflate"), counts, mass, prev_c, prev_m, prev_v, byz
+    )
+    np.testing.assert_array_equal(
+        np.asarray(c), [[4.0, 4.0], [3.0, 0.0], [4.0, 4.0]]
+    )
+
+    c, m = apply_edge_attack(
+        edge_attack_id("edge_replay"), counts, mass, prev_c, prev_m, prev_v, byz
+    )
+    # byz edge 0 replays its valid slot; byz edge 2's slot is invalid
+    # (nothing buffered yet) so it falls through to the fresh tensor.
+    np.testing.assert_array_equal(
+        np.asarray(c), [[9.0, 9.0], [3.0, 0.0], [2.0, 2.0]]
+    )
+    np.testing.assert_array_equal(np.asarray(m), [7.0, 4.0, 4.0])
+
+    # invariant: every attacked tensor stays inside [0, mass]
+    for name in EDGE_ATTACK_IDS[1:-1]:
+        c, m = apply_edge_attack(
+            edge_attack_id(name), counts, mass, prev_c, prev_m, prev_v, byz
+        )
+        assert bool(jnp.all((c >= 0) & (c <= m[:, None])))
+
+    with pytest.raises(ValueError, match="unknown edge attack"):
+        edge_attack_id("edge_nonsense")
+
+
+@pytest.mark.parametrize("attack", ["edge_inflate", "edge_sign_flip"])
+@pytest.mark.parametrize(
+    "merge,trim", [("median", 0), ("trimmed", 3)], ids=["median", "trimmed"]
+)
+def test_byzantine_edges_breakdown(attack, merge, trim):
+    """floor(E/2) - 1 corrupted edges at realistic edge mass: the naive
+    additive merge inherits the corruption; the rate-space robust merges
+    stay within the honest edges' sampling noise (>= 4x tighter).
+
+    Asserted at the root-merge layer — a full training endpoint conflates
+    merge quality with chaotic trajectory divergence, and the tiny test
+    fixture's 1-2-client edges quantize vote rates too coarsely for any
+    order-statistic merge to be meaningful. Here each edge carries 200
+    clients' binomial vote counts over a spread of per-coordinate rates
+    (sign-flip is self-cancelling at rate 1/2, so the spread matters).
+    """
+    from types import SimpleNamespace
+
+    from repro.fl.hierarchy import _root_merge
+
+    rng = np.random.default_rng(0)
+    E, D, MASS = 8, 64, 200.0
+    p = rng.uniform(0.1, 0.9, D)
+    counts = jnp.asarray(rng.binomial(int(MASS), p, (E, D)), jnp.float32)
+    mass = jnp.full((E,), MASS, jnp.float32)
+    # honest reference: the exact-sum estimate in rate space ((2N - M)/M)
+    honest = 2 * np.asarray(counts).sum(0) / (E * MASS) - 1
+
+    zeros = jnp.zeros_like(counts), jnp.zeros_like(mass), jnp.zeros((E,), bool)
+    c_a, m_a = apply_edge_attack(
+        edge_attack_id(attack), counts, mass, *zeros, jnp.arange(E) < 3
+    )
+
+    def err(merge_name, t):
+        cfg = SimpleNamespace(edge_merge=merge_name, edge_trim=t)
+        cm, mm = _root_merge(cfg, c_a, m_a, None)
+        return float(np.abs(2 * np.asarray(cm) / np.asarray(mm) - 1 - honest).max())
+
+    err_naive, err_robust = err("sum", 0), err(merge, trim)
+    assert err_naive > 4 * err_robust, (attack, merge, err_naive, err_robust)
+    assert err_robust < 0.15, err_robust  # within honest sampling noise
+
+
+def test_trimmed_merge_clean_parity(round_env):
+    """With zero Byzantine edges the trimmed merge is a consistent
+    estimator of the same update (not bit-exact — rate-space mean over a
+    trimmed edge subset), and stays close to the exact sum."""
+    base = dict(
+        n_clients=N, rounds=2, local_epochs=1, aggregator="probit_plus",
+        client_chunk=4, tree_edges=5,
+    )
+    exact, _ = _run(round_env, FLConfig(**base), eager=False)
+    trimmed, _ = _run(
+        round_env, FLConfig(**base, edge_merge="trimmed", edge_trim=1),
+        eager=False,
+    )
+    # same order of magnitude as the update itself: a sanity bound, the
+    # robustness-vs-exactness tradeoff is quantified in the breakdown test
+    err = np.linalg.norm(np.asarray(trimmed.w_global) - np.asarray(exact.w_global))
+    assert err < 1.0, err
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+_TREE = dict(
+    n_clients=N, rounds=1, aggregator="probit_plus", client_chunk=4, tree_edges=2
+)
+
+
+@pytest.mark.parametrize(
+    "overrides,match",
+    [
+        (dict(n_clients=N, rounds=1, edge_buffer=2), "requires a hierarchical"),
+        (dict(n_clients=N, rounds=1, edge_merge="median"), "requires a hierarchical"),
+        (dict(_TREE, aggregator="fedavg"), "count-streaming"),
+        (dict(_TREE, client_chunk=0), "client_chunk"),
+        (dict(_TREE, tree_edges=N + 1), "exceeds the cohort"),
+        # the earlier chunk-vs-async-server gate fires first; either way a
+        # buffered-async client round cannot coexist with a tree
+        (dict(_TREE, async_buffer=2), "async_buffer"),
+        (dict(_TREE, stream_shard=True, stateless_clients=True), "tree_shard"),
+        (dict(_TREE, edge_buffer=3), "exceeds tree_edges"),
+        (dict(_TREE, edge_attack="flip_codes"), "unknown edge_attack"),
+        (dict(_TREE, byz_edges=3), "byz_edges must be in"),
+        (dict(_TREE, byz_edges=1), "needs an edge_attack"),
+        (dict(_TREE, byz_edges=1, edge_attack="edge_replay"), "edge_replay"),
+        (dict(_TREE, edge_merge="krum"), "unknown edge_merge"),
+        (
+            dict(_TREE, edge_merge="median", edge_buffer=2),
+            "robust edge merges",
+        ),
+        (dict(_TREE, edge_trim=1), "edge_trim only applies"),
+        (
+            dict(_TREE, edge_merge="trimmed", edge_trim=1),
+            "trims away all",
+        ),
+        (dict(_TREE, tree_shard=True), "stateless_clients"),
+        (
+            dict(_TREE, tree_shard=True, stateless_clients=True,
+                 participation=0.5),
+            "participation",
+        ),
+        (
+            dict(_TREE, tree_shard=True, stateless_clients=True,
+                 tree_edges=3),
+            "equal edge slices",
+        ),
+    ],
+)
+def test_config_validation(overrides, match):
+    with pytest.raises(ValueError, match=match):
+        FLConfig(**overrides)
+
+
+# ---------------------------------------------------------------------------
+# Campaign integration
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_tree_cells():
+    """Tree cells run through the campaign engine: never fused (static
+    edge slices cannot pad to a traced boundary), tagged in describe(),
+    tree_edges in the group stats, and metric parity with the flat cell."""
+    from repro.sim import CampaignSpec, CellSpec, Task, run_campaign
+    from repro.sim.plan import fusable, plan_campaign
+
+    (xtr, ytr), (xte, yte) = make_classification(0, n_train=800, n_test=100)
+
+    def task_fn(cfg, _cache={}):
+        m = cfg.n_clients
+        if m not in _cache:
+            parts = partition_label_skew(ytr, m, 2, 30, seed=1)
+            _cache[m] = Task(
+                init_params=init_mlp_cached(),
+                loss_fn=functools.partial(xent_loss, mlp_logits),
+                acc_fn=functools.partial(accuracy, mlp_logits),
+                client_x=np.stack([xtr[i] for i in parts]),
+                client_y=np.stack([ytr[i] for i in parts]),
+                test={"x": xte, "y": yte},
+            )
+        return _cache[m]
+
+    base = dict(rounds=2, local_epochs=1, client_chunk=4)
+    spec = CampaignSpec(
+        base=base,
+        cells=(
+            CellSpec("flat", dict(n_clients=8)),
+            CellSpec("tree", dict(n_clients=8, tree_edges=2)),
+            CellSpec("tree_buf", dict(n_clients=8, tree_edges=2, edge_buffer=1)),
+        ),
+        seeds=(0,),
+    )
+    assert not fusable(spec.config(spec.cells[1]))
+    plan = plan_campaign(spec)
+    desc = plan.describe()
+    assert "tree@2" in desc and "buf1" in desc
+
+    res = run_campaign(spec, task_fn, plan=plan)
+    tree_groups = [g for g in res.groups if g["tree_edges"]]
+    assert tree_groups and all(not g["fused"] for g in tree_groups)
+    # synchronous tree == flat through the whole campaign path
+    np.testing.assert_allclose(
+        res.cell("tree").metrics["theta_mse"],
+        res.cell("flat").metrics["theta_mse"],
+        atol=1e-9,
+    )
+
+
+def test_trajectory_ci_json_roundtrip():
+    """Campaign JSON artifacts carry trajectory_ci; plots._cell_series
+    recovers nonzero bands from the serialized dict (satellite of the
+    tree-throughput figure: its PNG renders from the JSON on disk)."""
+    from benchmarks.plots import _cell_series
+    from repro.sim.metrics import CellResult, CampaignResult
+
+    rng = np.random.default_rng(0)
+    cell = CellResult(
+        name="c0", overrides={}, metrics={"loss": rng.random((3, 4))}
+    )
+    res = CampaignResult(cells=[cell], seeds=(0, 1, 2), groups=[], wall_s=1.0)
+    payload = res.to_json()
+    assert "trajectory_ci" in payload["cells"]["c0"]
+    series = _cell_series(payload, "loss")
+    mean, half = series["c0"]
+    np.testing.assert_allclose(mean, cell.trajectory("loss")[0])
+    assert np.all(half > 0)  # 3 distinct seeds -> nonzero CI everywhere
+    # older artifacts without the key degrade to a band-less line
+    del payload["cells"]["c0"]["trajectory_ci"]
+    _, half0 = _cell_series(payload, "loss")["c0"]
+    assert np.all(half0 == 0)
+
+
+# ---------------------------------------------------------------------------
+# Device-sharded edges + memory bound (CI tree-smoke targets)
+# ---------------------------------------------------------------------------
+
+_SHARD_CHILD = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import functools
+    import jax, numpy as np
+    from repro.data import make_classification, partition_label_skew
+    from repro.fl import rounds as R
+    from repro.fl.hierarchy import tree_shard_devices
+    from repro.fl.runtime import FLConfig
+    from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
+
+    M = 16
+    (xtr, ytr), (xte, yte) = make_classification(0, n_train=1000, n_test=200)
+    parts = partition_label_skew(ytr, M, 2, 40, seed=1)
+    env = dict(
+        p0=init_mlp(jax.random.PRNGKey(0), hidden=8),
+        loss=functools.partial(xent_loss, mlp_logits),
+        acc=functools.partial(accuracy, mlp_logits),
+        cx=np.stack([xtr[i] for i in parts]),
+        cy=np.stack([ytr[i] for i in parts]),
+        test={"x": xte, "y": yte},
+    )
+
+    def run(shard):
+        cfg = FLConfig(
+            n_clients=M, rounds=2, local_epochs=1, aggregator="probit_plus",
+            client_chunk=4, stateless_clients=True, tree_edges=4,
+            tree_shard=shard,
+        )
+        ctx = R.make_context(cfg, env["p0"], env["loss"], env["acc"],
+                             env["cx"], env["cy"], env["test"])
+        if shard:
+            assert tree_shard_devices(ctx) == 4, jax.devices()
+        params = R.cell_params(cfg)
+        state = R.init_run_state(ctx)
+        key = jax.random.PRNGKey(0)
+        fn = R.round_fn(ctx)
+        for _ in range(2):
+            key, kb, kr = jax.random.split(key, 3)
+            state, _ = fn(ctx, params, kr, state, R.round_batches(ctx, kb))
+        return np.asarray(state.w_global)
+
+    assert jax.device_count() == 4
+    w_host, w_shard = run(False), run(True)
+    np.testing.assert_allclose(w_shard, w_host, atol=1e-6)
+    print("TREE_SHARD_OK maxdiff=%.2e" % np.abs(w_shard - w_host).max())
+    """
+)
+
+_RSS_CHILD = textwrap.dedent(
+    """
+    import resource, sys
+    # Same hard cap as the flat streaming RSS test: the tree adds only
+    # O(E * d/8) stacked edge tensors on top of the chunk-bounded scan,
+    # and the donated round state reuses its buffers across rounds.
+    cap = 4 << 30
+    resource.setrlimit(resource.RLIMIT_AS, (cap, cap))
+    import functools
+    import jax, numpy as np
+    from repro.fl import rounds as R
+    from repro.fl.runtime import FLConfig
+    from repro.models.vision import accuracy, init_mlp, mlp_logits, xent_loss
+
+    M, DIM, PER, HID = 60_000, 8, 2, 64
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal(DIM).astype(np.float32)
+    cx = rng.standard_normal((M, PER, DIM), dtype=np.float32)
+    cy = (cx @ w > 0).astype(np.int32)
+    cfg = FLConfig(
+        n_clients=M, rounds=2, local_epochs=1, batch_size=PER, lr=0.01,
+        b_mode="fixed", b_init=0.1, pack_chunk=512,
+        client_chunk=2048, stateless_clients=True,
+        tree_edges=4, edge_buffer=4,
+    )
+    ctx = R.make_context(
+        cfg, init_mlp(jax.random.PRNGKey(0), in_dim=DIM, hidden=HID, classes=2),
+        functools.partial(xent_loss, mlp_logits),
+        functools.partial(accuracy, mlp_logits), cx, cy,
+        {"x": cx[0], "y": cy[0]},
+    )
+    _, traj = R.run_rounds(
+        ctx, R.cell_params(cfg), jax.random.PRNGKey(0),
+        R.init_run_state(ctx), with_acc=False,
+    )
+    jax.block_until_ready(traj)
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss // 1024
+    print(f"TREE_OK maxrss_mb={rss} loss={float(traj['loss'][-1]):.4f}")
+    """
+)
+
+
+def _child(script: str, *argv: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    # Drop any inherited device-count flag (repro.launch.dryrun writes 512
+    # into os.environ when another test imports it).
+    env["XLA_FLAGS"] = " ".join(
+        f
+        for f in env.get("XLA_FLAGS", "").split()
+        if "xla_force_host_platform_device_count" not in f
+    )
+    return subprocess.run(
+        [sys.executable, "-c", script, *argv],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+
+
+def test_tree_shard_parity_4_virtual_devices():
+    """Acceptance: tree_shard under 4 virtual CPU devices reproduces the
+    host-loop edge sweep <= 1e-6 (subprocess: the XLA flag must be set
+    before jax initializes). The CI tree-smoke job runs this."""
+    res = _child(_SHARD_CHILD)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "TREE_SHARD_OK" in res.stdout, res.stdout
+
+
+def test_tree_smoke_rss_capped():
+    """M = 60k through a 4-edge buffered tree under the flat round's 4 GB
+    RLIMIT_AS cap: resident memory stays chunk-bounded plus O(E * d/8)
+    edge tensors — the donation-backed memory acceptance for the tree."""
+    res = _child(_RSS_CHILD)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "TREE_OK" in res.stdout, res.stdout

@@ -365,11 +365,19 @@ def test_shard_parity_4_virtual_devices(task_factory):
 def test_campaign_throughput_benchmark_monotone(tmp_path):
     """Nightly: cells/sec at 4 virtual CPU devices must be >= cells/sec
     at 1 device (the sweep's 1 -> 4 endpoint comparison; reduced rounds —
-    the full sweep runs in CI slow)."""
+    the full sweep runs in CI slow). On a single-core host the virtual
+    devices time-share one core, so the endpoint ratio is ~1.0 plus
+    scheduler noise; there we only bound the sharding overhead instead
+    of asserting a speedup that the hardware cannot produce."""
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import fig_campaign_throughput as bench
 
     out = bench.main(rounds=5)
     thr = [out["sweep"][k]["cells_per_sec"] for k in sorted(out["sweep"])]
-    assert out["monotone_1_to_max"], f"throughput regressed with devices: {thr}"
-    assert thr[-1] >= thr[0]
+    if (os.cpu_count() or 1) > 1:
+        assert out["monotone_1_to_max"], f"throughput regressed with devices: {thr}"
+        assert thr[-1] >= thr[0]
+    else:
+        assert thr[-1] >= 0.8 * thr[0], (
+            f"sharding overhead > 20% on a single core: {thr}"
+        )
